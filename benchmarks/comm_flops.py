@@ -1,0 +1,64 @@
+"""Paper-exact Table 1/2 comm + FLOPs columns, computed analytically from
+the real ResNet18-GN / VGG11-GN definitions (no training needed).
+
+Expected (paper): ResNet18 dense comm 446.9 MB, DisPFL 223.4 MB; ring 89.4 /
+44.6 MB; FC 4423.9 / 2211.4 MB; FLOPs 8.3e12 dense, ~7.0e12 DisPFL@0.5;
+VGG11 comm 184.6 MB @50%.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import timer
+from repro.core.accounting import decentralized_comm, sparse_training_flops
+from repro.core.masks import erk_densities_for_params
+from repro.core.topology import fully_connected, ring, time_varying_random
+from repro.models import cnn
+from repro.utils.tree import tree_size
+
+
+def run(fast: bool = True) -> list[dict]:
+    del fast
+    rows = []
+    with timer() as t:
+        r18 = cnn.init_resnet18(jax.random.PRNGKey(0), 10)
+        v11 = cnn.init_vgg11(jax.random.PRNGKey(0), 10)
+        n18, n11 = tree_size(r18), tree_size(v11)
+        k = 100
+        topo = {
+            "dynamic": time_varying_random(k, 10, 0, seed=0),
+            "ring": ring(k),
+            "fc": fully_connected(k),
+        }
+        for tname, a in topo.items():
+            dense = decentralized_comm(a, [n18] * k, n18)
+            sparse = decentralized_comm(a, [int(n18 * 0.5)] * k, n18)
+            rows.append({"name": f"comm/resnet18/{tname}/dense",
+                         "MB": dense.row()["busiest_MB"]})
+            rows.append({"name": f"comm/resnet18/{tname}/dispfl_0.5",
+                         "MB": sparse.row()["busiest_MB"]})
+        dense_v = decentralized_comm(topo["dynamic"], [int(n11 * 0.5)] * k, n11)
+        rows.append({"name": "comm/vgg11/dynamic/dispfl_0.5",
+                     "MB": dense_v.row()["busiest_MB"]})
+
+        fl18 = cnn.resnet18_fwd_flops(10, 32)
+        dens = erk_densities_for_params(r18, 0.5)
+        rows.append({
+            "name": "flops/resnet18/dense",
+            "flops_1e12": round(sparse_training_flops(
+                fl18, {p: 1.0 for p in fl18}, 500, 5, 0).per_round_flops / 1e12, 2),
+            "paper": 8.3})
+        rows.append({
+            "name": "flops/resnet18/dispfl_0.5",
+            "flops_1e12": round(sparse_training_flops(
+                fl18, dens, 500, 5, 1, 128).per_round_flops / 1e12, 2),
+            "paper": 7.0})
+        fl11 = cnn.vgg11_fwd_flops(10, 32)
+        dens11 = erk_densities_for_params(v11, 0.5)
+        rows.append({
+            "name": "flops/vgg11/dispfl_0.5",
+            "flops_1e12": round(sparse_training_flops(
+                fl11, dens11, 500, 5, 1, 128).per_round_flops / 1e12, 2)})
+    for r in rows:
+        r.setdefault("us_per_call", round(t["s"] * 1e6 / len(rows)))
+    return rows

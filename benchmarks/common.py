@@ -1,0 +1,49 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run(fast: bool) -> list[dict]`` where each
+dict is one result row.  ``emit`` renders rows as the harness CSV
+(``name,us_per_call,derived``): *name* identifies the experiment cell,
+*us_per_call* is the wall-time per unit of work, and *derived* carries the
+paper-comparable quantities (accuracy / MB / FLOPs / roofline terms).
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def emit(rows: list[dict]) -> None:
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        print(f"{name},{us},{json.dumps(r, default=str)}")
+
+
+def fl_setup(fast: bool, partition: str, seed: int = 0,
+             n_clients: int | None = None):
+    from repro.data import build_federated_image_task
+    from repro.fl import FLConfig, make_cnn_task
+
+    k = n_clients or (8 if fast else 20)
+    clients, _ = build_federated_image_task(
+        seed, n_clients=k, partition=partition, alpha=0.3,
+        classes_per_client=2,
+        n_train_per_class=60 if fast else 150,
+        n_test_per_client=30 if fast else 60,
+        hw=16, noise=0.8)
+    task = make_cnn_task("smallcnn", 10, 16, width=8 if fast else 16)
+    cfg = FLConfig(n_clients=k, rounds=4 if fast else 20,
+                   local_epochs=2 if fast else 5,
+                   batch_size=32, degree=min(10, k - 1) if not fast else 3,
+                   seed=seed, eval_every=1)
+    return task, clients, cfg

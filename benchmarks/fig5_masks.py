@@ -1,0 +1,104 @@
+"""Paper Fig 5: learned masks encode task similarity.
+
+Clients are split into label-distribution groups; after DisPFL training, the
+aligned Hamming distance between learned masks should be smaller within a
+group than across groups, and anti-correlate with label cos-similarity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import timer
+
+
+def _mask_flat(mask) -> np.ndarray:
+    import jax
+    return np.concatenate([np.asarray(x).reshape(-1)
+                           for x in jax.tree.leaves(mask)])
+
+
+def run(fast: bool = True) -> list[dict]:
+    import jax
+
+    from repro.core.evolve import cosine_prune_rate, evolve_masks, layer_nnz_budgets
+    from repro.core.gossip import gossip_average_one
+    from repro.core.masks import apply_mask, erk_densities_for_params, init_mask
+    from repro.core.topology import make_adjacency
+    from repro.data import build_federated_image_task
+    from repro.fl import FLConfig, make_cnn_task
+    from repro.fl.base import local_sgd
+    from repro.optim import SGDConfig
+
+    n_groups, per_group = 4, (2 if fast else 5)
+    k = n_groups * per_group
+    # group g clients share a seed so their Dir(0.3) label dists coincide
+    base_clients, _ = build_federated_image_task(
+        0, n_clients=n_groups, partition="dirichlet", alpha=0.3,
+        n_train_per_class=80, hw=16)
+    rng = np.random.default_rng(0)
+    clients = []
+    groups = []
+    for g in range(n_groups):
+        for _ in range(per_group):
+            clients.append(base_clients[g])
+            groups.append(g)
+
+    task = make_cnn_task("smallcnn", 10, 16, width=8)
+    cfg = FLConfig(n_clients=k, rounds=3 if fast else 10, local_epochs=2,
+                   batch_size=32, degree=3)
+    opt = SGDConfig(weight_decay=cfg.weight_decay)
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 2 * k)
+    params = [task.init_fn(keys[i]) for i in range(k)]
+    masks = [init_mask(keys[k + i], params[i], cfg.density) for i in range(k)]
+    densities = erk_densities_for_params(params[0], cfg.density)
+    budgets = layer_nnz_budgets(params[0], densities)
+    params = [apply_mask(p, m) for p, m in zip(params, masks)]
+
+    with timer() as t:
+        for r in range(cfg.rounds):
+            a = make_adjacency("random", k, r, cfg.degree, cfg.seed)
+            alpha = cosine_prune_rate(cfg.alpha0, r, cfg.rounds)
+            new_p, new_m = [], []
+            for i in range(k):
+                nbrs = [j for j in range(k) if a[i, j] > 0 and j != i]
+                w = gossip_average_one(params[i], masks[i],
+                                       [params[j] for j in nbrs],
+                                       [masks[j] for j in nbrs])
+                c = clients[i]
+                w = local_sgd(task, w, c.train_x, c.train_y, cfg.local_epochs,
+                              cfg.batch_size, cfg.lr_at(r), opt, rng,
+                              mask=masks[i])
+                xb, yb = c.sample_batch(rng, cfg.batch_size)
+                _, g_ = task.value_and_grad(w, xb, yb)
+                m2, w = evolve_masks(w, masks[i], g_, alpha, budgets)
+                new_p.append(w)
+                new_m.append(m2)
+            params, masks = new_p, new_m
+
+    flats = [_mask_flat(m) for m in masks]
+    dists = np.zeros((k, k))
+    cos = np.zeros((k, k))
+    for i in range(k):
+        for j in range(k):
+            dists[i, j] = np.mean(flats[i] != flats[j])
+            a_, b_ = clients[i].label_dist, clients[j].label_dist
+            cos[i, j] = float(a_ @ b_ / (np.linalg.norm(a_) * np.linalg.norm(b_) + 1e-12))
+
+    same = [dists[i, j] for i in range(k) for j in range(k)
+            if i != j and groups[i] == groups[j]]
+    diff = [dists[i, j] for i in range(k) for j in range(k)
+            if groups[i] != groups[j]]
+    iu = np.triu_indices(k, 1)
+    corr = float(np.corrcoef(dists[iu], cos[iu])[0, 1])
+    return [{
+        "name": "fig5/mask_similarity",
+        "us_per_call": round(t["s"] * 1e6),
+        "hamming_same_group": round(float(np.mean(same)), 4),
+        "hamming_diff_group": round(float(np.mean(diff)), 4),
+        "corr_hamming_vs_cos_sim": round(corr, 4),
+        "ok_same_lt_diff": float(np.mean(same)) < float(np.mean(diff)),
+        "ok_anticorrelated": corr < 0,
+    }]

@@ -1,0 +1,30 @@
+"""Paper Fig 6 (App. B.6): robustness to random client dropping."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import fl_setup, timer
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import run_strategy
+
+    rows = []
+    task, clients, base = fl_setup(fast, "dirichlet")
+    probs = (0.0, 0.5) if fast else (0.0, 0.2, 0.5, 0.8)
+    accs = {}
+    for p in probs:
+        cfg = dataclasses.replace(base, topology="fc", drop_prob=p)
+        with timer() as t:
+            res = run_strategy("dispfl", task, clients, cfg)
+        accs[p] = res.final_acc
+        rows.append({"name": f"fig6/drop_{p}",
+                     "us_per_call": round(t["s"] * 1e6 / max(cfg.rounds, 1)),
+                     "acc": round(res.final_acc, 4)})
+    # local baseline for reference (dropping can't hurt below local-only)
+    res_local = run_strategy("local", task, clients, base)
+    rows.append({"name": "fig6/local_baseline",
+                 "acc": round(res_local.final_acc, 4)})
+    rows.append({"name": "fig6/check/graceful_degradation",
+                 "ok": accs[max(probs)] > 0.75 * accs[0.0]})
+    return rows

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU) vs jnp oracle.
+
+On CPU the interpreter is slower than XLA-fused jnp — the point here is the
+derived quantities: bytes touched, block-sparse skip fraction, and the
+FLOPs the MXU would skip on real hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.masked_matmul import block_mask_from_mask
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+
+    # gossip_avg
+    j, n = 10, (1 << 18 if fast else 1 << 22)
+    m = (jax.random.uniform(ks[0], (j, n)) < 0.5).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (j, n)) * m
+    own = m[0]
+    us_k = _time(lambda: ops.gossip_avg(list(w), list(m), own))
+    us_r = _time(lambda: ref.gossip_avg_ref(w, m, own))
+    rows.append({"name": "kernel/gossip_avg", "us_per_call": round(us_k),
+                 "ref_us": round(us_r), "bytes_touched": int(w.nbytes * 2 + own.nbytes),
+                 "neighbors": j})
+
+    # masked matmul at three densities
+    mdim, kdim, ndim = (256, 512, 512) if fast else (512, 2048, 2048)
+    x = jax.random.normal(ks[2], (mdim, kdim), jnp.float32)
+    wgt = jax.random.normal(ks[3], (kdim, ndim), jnp.float32)
+    for density in (0.1, 0.5, 1.0):
+        mask = (jax.random.uniform(ks[0], (kdim, ndim)) < density).astype(jnp.float32)
+        bm = block_mask_from_mask(mask, 128, 128)
+        occ = float(jnp.mean(bm.astype(jnp.float32)))
+        us = _time(lambda mask=mask: ops.masked_matmul(x, wgt, mask))
+        rows.append({
+            "name": f"kernel/masked_matmul/density_{density}",
+            "us_per_call": round(us),
+            "block_occupancy": round(occ, 3),
+            "mxu_flops_skipped_frac": round(1.0 - occ, 3),
+            "dense_flops": 2 * mdim * kdim * ndim,
+        })
+
+    # prune_regrow
+    n = 1 << 16
+    mk = (jax.random.uniform(ks[0], (n,)) < 0.5).astype(jnp.float32)
+    wv = jax.random.normal(ks[1], (n,)) * mk
+    gv = jax.random.normal(ks[2], (n,))
+    us = _time(lambda: ops.prune_regrow(wv, gv, mk, 0.3))
+    rows.append({"name": "kernel/prune_regrow", "us_per_call": round(us),
+                 "n": n})
+    return rows

@@ -1,0 +1,53 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and reports the three roofline terms + bottleneck per (arch x shape x mesh).
+
+Run ``PYTHONPATH=src python -m repro.launch.dryrun --both-meshes`` first to
+(re)generate artifacts; this benchmark only aggregates (compiling 60+
+combinations inside benchmarks.run would take an hour on CPU).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(fast: bool = True) -> list[dict]:
+    del fast
+    rows = []
+    files = sorted(glob.glob(os.path.join(ART_DIR, "*.json")))
+    if not files:
+        return [{"name": "roofline/missing",
+                 "note": "run `python -m repro.launch.dryrun --both-meshes` first"}]
+    n_ok = n_skip = n_fail = 0
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        tag = rec.get("tag", os.path.basename(path)[:-5])
+        if rec.get("status") == "skipped":
+            n_skip += 1
+            rows.append({"name": f"roofline/{tag}", "status": "skipped",
+                         "reason": rec.get("reason", "")[:60]})
+            continue
+        if rec.get("status") != "ok":
+            n_fail += 1
+            rows.append({"name": f"roofline/{tag}", "status": "FAILED"})
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        rows.append({
+            "name": f"roofline/{tag}",
+            "us_per_call": round(rec.get("compile_s", 0) * 1e6),
+            "clients": rec.get("n_clients"),
+            "compute_ms": r["compute_ms"],
+            "memory_ms": r["memory_ms"],
+            "collective_ms": r["collective_ms"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_ratio"],
+            "mfu_bound": r["mfu_bound"],
+        })
+    rows.append({"name": "roofline/summary", "ok": n_ok, "skipped": n_skip,
+                 "failed": n_fail})
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = JSON payload with
+the paper-comparable quantities).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "comm_flops",        # paper-exact Table 1/2 comm + FLOPs columns
+    "kernels_bench",     # Pallas kernel micro-benchmarks
+    "table1_accuracy",   # Table 1 (accuracy, both partitions)
+    "table2_topology",   # Table 2/8/9
+    "table3_heterogeneous",  # Table 3 + Fig 4
+    "table4_sparsity",   # Table 4
+    "table5_convergence",  # Tables 5-7
+    "fig5_masks",        # Fig 5
+    "fig6_dropping",     # Fig 6
+    "roofline",          # dry-run roofline aggregation
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    rows = []
+    failed = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows.extend(mod.run(fast=not args.full))
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            rows.append({"name": f"{name}/ERROR", "error": "see stderr"})
+    emit(rows)
+    if failed:
+        print(f"# FAILED modules: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

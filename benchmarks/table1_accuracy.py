@@ -1,0 +1,38 @@
+"""Paper Table 1: personalized accuracy + comm + FLOPs, all methods, both
+non-IID partitions (synthetic task at CPU scale; paper-exact comm/FLOP
+columns come from benchmarks/comm_flops.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import fl_setup, timer
+
+METHODS = ["local", "fedavg", "fedavg_ft", "dpsgd", "dpsgd_ft", "ditto",
+           "fomo", "subfedavg", "dispfl"]
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import run_strategy
+
+    rows = []
+    for partition in ("dirichlet", "pathological"):
+        task, clients, cfg = fl_setup(fast, partition)
+        for method in METHODS:
+            with timer() as t:
+                res = run_strategy(method, task, clients, cfg)
+            rows.append({
+                "name": f"table1/{partition}/{method}",
+                "us_per_call": round(t["s"] * 1e6 / max(cfg.rounds, 1)),
+                "acc": round(res.final_acc, 4),
+                "comm_busiest_MB": round(res.comm_busiest_mb, 2),
+                "flops_1e9": round(res.flops_per_round / 1e9, 2),
+            })
+    # the paper's headline ordering: DisPFL beats the global-model methods
+    by = {r["name"].split("/", 1)[1]: r["acc"] for r in rows}
+    rows.append({
+        "name": "table1/check/dispfl_beats_global_methods",
+        "pathological_dispfl": by.get("pathological/dispfl"),
+        "pathological_fedavg": by.get("pathological/fedavg"),
+        "ok": by.get("pathological/dispfl", 0) > by.get("pathological/fedavg", 1),
+    })
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Table 4: sparsity-ratio sweep (accuracy vs comm vs FLOPs).
+The paper finds a sweet spot at sparsity 0.5 — too sparse loses accuracy
+(little mask overlap), too dense loses the personalization benefit."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import fl_setup, timer
+
+SPARSITIES = [0.8, 0.5, 0.2]          # density = 1 - sparsity
+FULL_SPARSITIES = [0.8, 0.6, 0.5, 0.4, 0.2]
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import run_strategy
+
+    rows = []
+    task, clients, base = fl_setup(fast, "dirichlet")
+    for sp in (SPARSITIES if fast else FULL_SPARSITIES):
+        cfg = dataclasses.replace(base, density=1.0 - sp)
+        with timer() as t:
+            res = run_strategy("dispfl", task, clients, cfg)
+        rows.append({
+            "name": f"table4/sparsity_{sp}",
+            "us_per_call": round(t["s"] * 1e6 / max(cfg.rounds, 1)),
+            "acc": round(res.final_acc, 4),
+            "comm_busiest_MB": round(res.comm_busiest_mb, 3),
+            "flops_1e9": round(res.flops_per_round / 1e9, 2),
+        })
+    # monotone comm: higher sparsity => less communication
+    comms = [r["comm_busiest_MB"] for r in rows]
+    rows.append({"name": "table4/check/comm_monotone_in_sparsity",
+                 "ok": all(a <= b for a, b in zip(comms, comms[1:]))})
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Tables 5-7: communication rounds to reach target accuracies."""
+from __future__ import annotations
+
+from benchmarks.common import fl_setup, timer
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import run_strategy
+
+    rows = []
+    task, clients, cfg = fl_setup(fast, "pathological")
+    targets = (0.3, 0.45) if fast else (0.4, 0.6, 0.7)
+    for method in ("local", "dpsgd_ft", "subfedavg", "dispfl"):
+        with timer() as t:
+            res = run_strategy(method, task, clients, cfg, targets=targets)
+        row = {"name": f"table5/{method}",
+               "us_per_call": round(t["s"] * 1e6 / max(cfg.rounds, 1)),
+               "final_acc": round(res.final_acc, 4)}
+        for tgt, r in res.rounds_to.items():
+            row[f"rounds_to_{tgt}"] = r
+        rows.append(row)
+    return rows

@@ -1,0 +1,42 @@
+"""Client heterogeneity (paper §4.3, Table 3 / Fig 4): five capacity groups
+{20%, 40%, 60%, 80%, 100%} federate together; every group still learns.
+
+    PYTHONPATH=src python examples/heterogeneous_clients.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, make_cnn_task, run_strategy
+from repro.fl.decentralized import run_dpsgd
+
+
+def main() -> None:
+    k = 10
+    clients, _ = build_federated_image_task(
+        seed=1, n_clients=k, partition="pathological", classes_per_client=2,
+        n_train_per_class=80, hw=16)
+    task = make_cnn_task("smallcnn", 10, 16, width=12)
+    levels = [0.2, 0.4, 0.6, 0.8, 1.0]
+    caps = [levels[i % 5] for i in range(k)]
+    cfg = FLConfig(n_clients=k, rounds=8, local_epochs=3, batch_size=32,
+                   degree=4, capacities=caps, eval_every=4)
+
+    res = run_strategy("dispfl", task, clients, cfg)
+    print(f"DisPFL (heterogeneous capacities): acc={res.final_acc:.3f}")
+    accs = np.array(res.final_accs)
+    for lvl in levels:
+        sel = [i for i, c in enumerate(caps) if c == lvl]
+        print(f"  capacity {int(lvl*100):3d}% -> acc {accs[sel].mean():.3f}")
+
+    # baseline confined to the weakest device
+    res_d = run_dpsgd(task, clients, cfg, finetune=True, param_fraction=0.2)
+    print(f"D-PSGD-FT @20% params (weakest-device bound): "
+          f"acc={res_d.final_acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: DisPFL vs Local / D-PSGD-FT on a non-IID synthetic task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten clients, pathological label split (2 classes each), 8 rounds.  Shows the
+paper's headline effects: personalized accuracy above both local-only and
+consensus-model training, at roughly half the busiest-node communication.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, make_cnn_task, run_strategy
+
+
+def main() -> None:
+    clients, _ = build_federated_image_task(
+        seed=0, n_clients=10, partition="pathological", classes_per_client=2,
+        n_train_per_class=80, n_test_per_client=40, hw=16, noise=0.8)
+    task = make_cnn_task("smallcnn", n_classes=10, hw=16, width=12)
+    cfg = FLConfig(n_clients=10, rounds=8, local_epochs=3, batch_size=32,
+                   degree=4, density=0.5, eval_every=2)
+
+    print(f"{'method':12s} {'acc':>7s} {'comm(MB)':>9s} {'GFLOP/round':>12s}")
+    for method in ("local", "dpsgd", "dpsgd_ft", "dispfl"):
+        res = run_strategy(method, task, clients, cfg)
+        print(f"{method:12s} {res.final_acc:7.3f} "
+              f"{res.comm_busiest_mb:9.2f} {res.flops_per_round/1e9:12.2f}")
+
+
+if __name__ == "__main__":
+    main()

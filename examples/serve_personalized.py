@@ -1,0 +1,15 @@
+"""Personalized sparse serving: batched generation from per-client masked
+models of an assigned architecture (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_personalized.py [arch]
+"""
+import subprocess
+import sys
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "gemma3-1b"
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", ARCH,
+     "--clients", "4", "--batch", "2", "--prompt-len", "12", "--gen", "8"],
+    check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+)

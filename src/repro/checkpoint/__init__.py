@@ -1,0 +1,1 @@
+from repro.checkpoint.npz import load_pytree, save_pytree, save_clients, load_clients  # noqa: F401

@@ -1,0 +1,53 @@
+"""Checkpointing: pytrees <-> .npz archives (no external deps).
+
+Leaves are stored flat under their '/'-joined key paths; structure is
+reconstructed on load from the paths, so any nested-dict pytree round-trips.
+Per-client personalized models (params + masks) are stored one file per
+client under a directory.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_leaves_with_path
+
+PyTree = Any
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    flat = {p: np.asarray(x) for p, x in tree_leaves_with_path(tree)}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _insert(root: dict, keys: list[str], value) -> None:
+    cur = root
+    for k in keys[:-1]:
+        cur = cur.setdefault(k, {})
+    cur[keys[-1]] = value
+
+
+def load_pytree(path: str, as_jnp: bool = True) -> PyTree:
+    with np.load(path) as z:
+        root: dict = {}
+        for key in z.files:
+            val = z[key]
+            if as_jnp:
+                val = jnp.asarray(val)
+            _insert(root, key.split("/"), val)
+    return root
+
+
+def save_clients(dirpath: str, states: list[dict]) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    for k, st in enumerate(states):
+        save_pytree(os.path.join(dirpath, f"client_{k:04d}.npz"), st)
+
+
+def load_clients(dirpath: str) -> list[PyTree]:
+    files = sorted(f for f in os.listdir(dirpath) if f.endswith(".npz"))
+    return [load_pytree(os.path.join(dirpath, f)) for f in files]

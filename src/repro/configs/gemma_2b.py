@@ -1,0 +1,6 @@
+"""Config module for --arch gemma-2b (see archs.py for the full definition and
+source citation; SMOKE is the reduced per-arch smoke-test variant)."""
+from repro.configs.archs import GEMMA_2B as CONFIG
+from repro.configs.archs import SMOKE_ARCHS
+
+SMOKE = SMOKE_ARCHS["gemma-2b"]

@@ -1,0 +1,6 @@
+"""Config module for --arch llava-next-mistral-7b (see archs.py for the full definition and
+source citation; SMOKE is the reduced per-arch smoke-test variant)."""
+from repro.configs.archs import LLAVA_NEXT_MISTRAL_7B as CONFIG
+from repro.configs.archs import SMOKE_ARCHS
+
+SMOKE = SMOKE_ARCHS["llava-next-mistral-7b"]

@@ -1,0 +1,3 @@
+# DisPFL's primary contribution: personalized sparse masks + decentralized
+# sparse training (ERK init, intersection gossip, RigL-style mask search).
+from repro.core import accounting, evolve, gossip, masks, topology  # noqa: F401

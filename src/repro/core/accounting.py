@@ -1,0 +1,158 @@
+"""Communication and computation accounting (paper Table 1/2/3 columns).
+
+The paper reports, per communication round:
+  * ``Comm (MB)`` — bytes moved through the *busiest* node.  Convention from
+    the paper's released code: payload = 4 bytes per *transmitted value*
+    (nnz of the sender's mask); the {0,1} mask bitmap itself is not counted
+    in the headline number (we also expose it).  Busiest node = max over
+    nodes of (bytes uploaded + bytes downloaded)/2 matched to their table:
+    for a server with C connections it is C * model_bytes (download == upload
+    so a single direction is quoted); for decentralized nodes it is
+    degree * payload.
+  * ``FLOPS (1e12)`` — total training FLOPs per client per round, counting a
+    multiply-add as 2 FLOPs, forward+backward = 3x forward, over
+    (local_epochs * n_samples).  Sparse models scale each layer's forward
+    FLOPs by its *layer density* (ERK is non-uniform, which is why the paper
+    gets 7.0e12 rather than 4.15e12 at global density 0.5), plus one dense
+    forward+backward batch per round for the mask-search gradient.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import numpy as np
+
+PyTree = Any
+
+BYTES_PER_VALUE = 4  # fp32 on the wire, per the paper
+
+
+@dataclass
+class CommReport:
+    busiest_mb: float
+    avg_per_node_mb: float
+    total_mb: float
+    busiest_mb_with_bitmap: float
+
+    def row(self) -> dict:
+        return {
+            "busiest_MB": round(self.busiest_mb, 1),
+            "avg_node_MB": round(self.avg_per_node_mb, 1),
+            "total_MB": round(self.total_mb, 1),
+            "busiest_MB_with_bitmap": round(self.busiest_mb_with_bitmap, 1),
+        }
+
+
+def payload_bytes(n_values: int, n_coords: int = 0, with_bitmap: bool = False) -> float:
+    b = n_values * BYTES_PER_VALUE
+    if with_bitmap:
+        b += n_coords / 8.0
+    return b
+
+
+def decentralized_comm(
+    adjacency: np.ndarray,
+    nnz_per_client: list[int],
+    n_coords: int,
+) -> CommReport:
+    """Per-round communication for a decentralized topology.
+
+    adjacency[k, j] = 1 iff k receives j's model; sender j uploads its own
+    nnz_j values once per receiving edge.
+    """
+    k = adjacency.shape[0]
+    a = adjacency.copy().astype(float)
+    np.fill_diagonal(a, 0.0)
+    up = np.zeros(k)
+    down = np.zeros(k)
+    up_bm = np.zeros(k)
+    down_bm = np.zeros(k)
+    for j in range(k):
+        receivers = a[:, j].sum()
+        up[j] = receivers * payload_bytes(nnz_per_client[j])
+        up_bm[j] = receivers * payload_bytes(nnz_per_client[j], n_coords, True)
+    for i in range(k):
+        down[i] = sum(
+            payload_bytes(nnz_per_client[j]) for j in range(k) if a[i, j] > 0
+        )
+        down_bm[i] = sum(
+            payload_bytes(nnz_per_client[j], n_coords, True)
+            for j in range(k)
+            if a[i, j] > 0
+        )
+    per_node = np.maximum(up, down)  # busiest direction, matching the paper
+    per_node_bm = np.maximum(up_bm, down_bm)
+    total = up.sum()
+    mb = 1.0 / 1e6  # decimal MB, matching the paper's tables
+    return CommReport(
+        busiest_mb=float(per_node.max()) * mb,
+        avg_per_node_mb=float(per_node.mean()) * mb,
+        total_mb=float(total) * mb,
+        busiest_mb_with_bitmap=float(per_node_bm.max()) * mb,
+    )
+
+
+def centralized_comm(
+    n_connected: int, nnz_per_client: list[int], n_coords: int
+) -> CommReport:
+    """Server-centric: the server is the busiest node; it downloads and
+    uploads ``n_connected`` models per round (a single direction is quoted,
+    per the paper's table)."""
+    sel = nnz_per_client[:n_connected]
+    b = sum(payload_bytes(v) for v in sel)
+    b_bm = sum(payload_bytes(v, n_coords, True) for v in sel)
+    mb = 1.0 / 1e6
+    return CommReport(
+        busiest_mb=b * mb,
+        avg_per_node_mb=b * mb / max(n_connected, 1),
+        total_mb=2 * b * mb,
+        busiest_mb_with_bitmap=b_bm * mb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FlopsReport:
+    per_round_flops: float          # per client, per communication round
+    dense_per_round_flops: float
+    fwd_flops_per_sample: float
+
+    def row(self) -> dict:
+        return {
+            "FLOPS_1e12": round(self.per_round_flops / 1e12, 2),
+            "dense_FLOPS_1e12": round(self.dense_per_round_flops / 1e12, 2),
+        }
+
+
+def sparse_training_flops(
+    layer_fwd_flops: dict[str, float],
+    layer_densities: dict[str, float],
+    n_samples: int,
+    local_epochs: int,
+    mask_search_batches: int = 1,
+    batch_size: int = 128,
+    bwd_multiplier: float = 2.0,
+) -> FlopsReport:
+    """Per-round training FLOPs with layer-wise sparse scaling.
+
+    fwd+bwd = (1 + bwd_multiplier) * fwd.  The mask search adds
+    ``mask_search_batches`` dense forward+backward batches per round.
+    """
+    dense_fwd = sum(layer_fwd_flops.values())
+    sparse_fwd = sum(
+        f * layer_densities.get(k, 1.0) for k, f in layer_fwd_flops.items()
+    )
+    steps_samples = n_samples * local_epochs
+    train = steps_samples * sparse_fwd * (1.0 + bwd_multiplier)
+    mask_search = mask_search_batches * batch_size * dense_fwd * (1.0 + bwd_multiplier)
+    dense_train = steps_samples * dense_fwd * (1.0 + bwd_multiplier)
+    return FlopsReport(
+        per_round_flops=train + mask_search,
+        dense_per_round_flops=dense_train,
+        fwd_flops_per_sample=dense_fwd,
+    )

@@ -1,0 +1,120 @@
+"""Local mask search (paper Alg. 2, Fig. 1c) — RigL-style prune & regrow.
+
+Once per communication round, each client:
+  1. computes the *dense* gradient g(w_{k,t+1}) on one local batch
+     (backward without the mask — this is the only dense computation),
+  2. per layer, prunes the alpha_t-fraction of *active* weights with the
+     smallest magnitude,
+  3. regrows the same count among *inactive* coordinates, picking those with
+     the largest dense-gradient magnitude.
+
+alpha_t follows cosine annealing (Liu et al., 2021b):
+    alpha_t = alpha_0 / 2 * (1 + cos(t * pi / T_end)).
+
+Regrown coordinates re-enter at weight 0; the *next* intersection gossip
+warm-starts them from peers that hold them (paper §3.2 point (iii)).
+
+The layer counts (n_active) are static given the ERK densities, so the layer
+update is shape-static and can be jitted; the simulator calls it eagerly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import default_sparsifiable
+from repro.utils.tree import tree_map_with_path
+
+PyTree = Any
+
+
+def cosine_prune_rate(alpha0: float, round_idx: int, total_rounds: int) -> float:
+    """alpha_t = alpha_0/2 * (1 + cos(t*pi/T))."""
+    t = min(round_idx, total_rounds)
+    return alpha0 / 2.0 * (1.0 + math.cos(t * math.pi / max(total_rounds, 1)))
+
+
+def _exact_topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """{0,1} mask (flattened shape) selecting the k largest scores, exact
+    count even under ties (argsort-based)."""
+    flat = scores.reshape(-1)
+    if k <= 0:
+        return jnp.zeros_like(flat)
+    order = jnp.argsort(-flat)
+    sel = jnp.zeros_like(flat).at[order[:k]].set(1.0)
+    return sel
+
+
+def evolve_mask_layer(
+    w: jax.Array,
+    m: jax.Array,
+    g: jax.Array,
+    prune_rate: float,
+    n_active: int,
+) -> tuple[jax.Array, jax.Array]:
+    """One layer of Alg. 2.  Returns (new_mask, new_weights).
+
+    n_active is the (static) nnz budget of this layer's mask; it is preserved
+    exactly: prune n_prune, regrow n_prune.
+    """
+    n_prune = int(math.ceil(prune_rate * n_active))
+    n_keep = n_active - n_prune
+    shape = w.shape
+    mf = m.reshape(-1).astype(jnp.float32)
+    wf = w.reshape(-1).astype(jnp.float32)
+    gf = g.reshape(-1).astype(jnp.float32)
+
+    neg_inf = jnp.float32(-jnp.inf)
+    # -- magnitude pruning among active coords
+    keep_scores = jnp.where(mf > 0, jnp.abs(wf), neg_inf)
+    m_half = _exact_topk_mask(keep_scores, n_keep)
+    # -- gradient regrow among inactive coords (of the pruned mask)
+    grow_scores = jnp.where(m_half > 0, neg_inf, jnp.abs(gf))
+    grown = _exact_topk_mask(grow_scores, n_prune)
+    new_m = (m_half + grown).reshape(shape)
+    # pruned coords are zeroed; regrown coords start at 0 (w was masked)
+    new_w = w * new_m.astype(w.dtype)
+    return new_m.astype(m.dtype), new_w
+
+
+def evolve_masks(
+    params: PyTree,
+    mask: PyTree,
+    dense_grads: PyTree,
+    prune_rate: float,
+    layer_nnz: dict[str, int],
+    sparsifiable: Callable[[str, Any], bool] = default_sparsifiable,
+) -> tuple[PyTree, PyTree]:
+    """Apply Alg. 2 across the pytree.  ``layer_nnz`` maps sparsifiable leaf
+    paths to their static active-count budgets (from the ERK allocation).
+    Non-sparsifiable leaves pass through unchanged.
+    """
+    new_mask = {}
+    new_params = {}
+
+    def one(path, w, m, g):
+        if path in layer_nnz and sparsifiable(path, w):
+            nm, nw = evolve_mask_layer(w, m, g, prune_rate, layer_nnz[path])
+            return nm, nw
+        return m, w
+
+    paired = tree_map_with_path(one, params, mask, dense_grads)
+    # unzip the (mask, weight) tuples
+    new_mask = jax.tree.map(lambda t: t[0], paired, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda t: t[1], paired, is_leaf=lambda x: isinstance(x, tuple))
+    return new_mask, new_params
+
+
+def layer_nnz_budgets(params: PyTree, densities: dict[str, float]) -> dict[str, int]:
+    """Static per-layer active counts implied by ERK densities."""
+    import numpy as np
+    from repro.utils.tree import tree_leaves_with_path
+
+    out = {}
+    for p, x in tree_leaves_with_path(params):
+        if p in densities:
+            out[p] = int(round(densities[p] * int(np.prod(x.shape))))
+    return out

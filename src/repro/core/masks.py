@@ -1,0 +1,166 @@
+"""Personalized sparse masks — ERK initialization and capacity handling.
+
+Implements the mask machinery of DisPFL (Dai et al., ICML 2022, §3.2):
+
+* Erdos-Renyi-Kernel (ERK) layer-density allocation (Evci et al., 2020):
+  layers with more parameters get *higher sparsity* (lower density); the raw
+  per-layer score is (sum of dims)/(product of dims) and a global scale eps
+  is solved so the overall density hits the client's capacity ``c_k``.
+* Only leaves with ndim >= 2 are sparsified (weights); biases / norm scales
+  stay dense — they are a negligible fraction of parameters and pruning them
+  destabilizes training (standard DST practice, matches the paper's code).
+* Each client k draws an i.i.d. Bernoulli(density_l) mask per layer from its
+  own PRNG stream, yielding the personalized initial masks m_{k,0}.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import tree_leaves_with_path, tree_map_with_path, split_like
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Which leaves are sparsifiable
+# ---------------------------------------------------------------------------
+
+
+def default_sparsifiable(path: str, leaf) -> bool:
+    """Weights (ndim>=2) are sparsifiable; biases/norm scales are not.
+
+    Embedding tables are sparsifiable too — the paper masks all conv/fc
+    weights; we extend the same rule to matmul-shaped tensors.
+    """
+    del path
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2
+
+
+# ---------------------------------------------------------------------------
+# ERK density allocation
+# ---------------------------------------------------------------------------
+
+
+def erk_layer_densities(
+    shapes: dict[str, tuple[int, ...]],
+    density: float,
+    erk_power_scale: float = 1.0,
+) -> dict[str, float]:
+    """Solve per-layer ERK densities so that total nnz ~= density * total.
+
+    Mirrors RigL's ERK: raw_l = (sum(shape)/prod(shape))**power; density_l =
+    min(1, eps*raw_l); eps solved by iteratively freezing saturated layers.
+    """
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0,1], got {density}")
+    numel = {k: int(np.prod(s)) for k, s in shapes.items()}
+    total = sum(numel.values())
+    target_nnz = density * total
+    raw = {
+        k: (float(np.sum(s)) / float(np.prod(s))) ** erk_power_scale
+        for k, s in shapes.items()
+    }
+    dense_layers: set[str] = set()
+    while True:
+        # nnz contributed by saturated (fully dense) layers
+        dense_nnz = sum(numel[k] for k in dense_layers)
+        free = {k: v for k, v in raw.items() if k not in dense_layers}
+        denom = sum(raw[k] * numel[k] for k in free)
+        if denom <= 0:
+            eps = 0.0
+        else:
+            eps = (target_nnz - dense_nnz) / denom
+        newly_dense = [k for k in free if raw[k] * eps > 1.0]
+        if not newly_dense:
+            break
+        dense_layers.update(newly_dense)
+    out = {}
+    for k in shapes:
+        if k in dense_layers:
+            out[k] = 1.0
+        else:
+            out[k] = float(np.clip(raw[k] * eps, 0.0, 1.0))
+    return out
+
+
+def erk_densities_for_params(
+    params: PyTree,
+    density: float,
+    sparsifiable: Callable[[str, Any], bool] = default_sparsifiable,
+) -> dict[str, float]:
+    """ERK densities for the sparsifiable leaves of a parameter pytree."""
+    shapes = {
+        p: tuple(x.shape)
+        for p, x in tree_leaves_with_path(params)
+        if sparsifiable(p, x)
+    }
+    if not shapes:
+        return {}
+    return erk_layer_densities(shapes, density)
+
+
+# ---------------------------------------------------------------------------
+# Mask initialization
+# ---------------------------------------------------------------------------
+
+
+def init_mask(
+    key: jax.Array,
+    params: PyTree,
+    density: float,
+    sparsifiable: Callable[[str, Any], bool] = default_sparsifiable,
+    dtype=jnp.float32,
+) -> PyTree:
+    """Random ERK mask for one client: Bernoulli(density_l) per layer.
+
+    Non-sparsifiable leaves get an all-ones mask so downstream code can treat
+    the mask pytree uniformly (w ⊙ m is a no-op there).
+    """
+    densities = erk_densities_for_params(params, density, sparsifiable)
+    keys = split_like(key, params)
+
+    def one(path, x, k):
+        if path in densities:
+            d = densities[path]
+            m = jax.random.bernoulli(k, p=d, shape=x.shape)
+            return m.astype(dtype)
+        return jnp.ones(x.shape, dtype=dtype)
+
+    return tree_map_with_path(one, params, keys)
+
+
+def init_client_masks(
+    key: jax.Array,
+    params: PyTree,
+    capacities: list[float],
+    sparsifiable: Callable[[str, Any], bool] = default_sparsifiable,
+    dtype=jnp.float32,
+) -> list[PyTree]:
+    """Personalized masks m_{k,0}, one per client, density = capacity c_k."""
+    keys = jax.random.split(key, len(capacities))
+    return [
+        init_mask(k, params, c, sparsifiable, dtype)
+        for k, c in zip(keys, capacities)
+    ]
+
+
+def mask_density(mask: PyTree, params: PyTree | None = None,
+                 sparsifiable: Callable[[str, Any], bool] = default_sparsifiable) -> float:
+    """Achieved density over sparsifiable leaves."""
+    ref = params if params is not None else mask
+    flags = {p: sparsifiable(p, x) for p, x in tree_leaves_with_path(ref)}
+    nnz = 0
+    tot = 0
+    for p, m in tree_leaves_with_path(mask):
+        if flags.get(p, True):
+            nnz += int(jnp.sum(m != 0))
+            tot += int(np.prod(m.shape))
+    return nnz / max(tot, 1)
+
+
+def apply_mask(params: PyTree, mask: PyTree) -> PyTree:
+    """w ⊙ m (Hadamard product over the pytree)."""
+    return jax.tree.map(lambda w, m: w * m.astype(w.dtype), params, mask)

@@ -1,0 +1,92 @@
+"""Communication topologies for the decentralized protocol (paper Fig. 2).
+
+Adjacency matrices are (K, K) float arrays with A[k, j] = 1 iff client k
+*receives* client j's model this round.  The diagonal is always 1 (a client
+always keeps itself).  The paper's main setting is the *time-varying random*
+topology where each client samples `degree` random neighbors per round and
+the busiest node's fan-in is bounded by the centralized server's fan-in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def ring(n_clients: int) -> np.ndarray:
+    """Static ring: each client hears its two ring neighbors (Fig. 2b)."""
+    a = np.eye(n_clients)
+    for k in range(n_clients):
+        a[k, (k - 1) % n_clients] = 1.0
+        a[k, (k + 1) % n_clients] = 1.0
+    return a
+
+
+def fully_connected(n_clients: int) -> np.ndarray:
+    """All-to-all (Fig. 2c)."""
+    return np.ones((n_clients, n_clients))
+
+
+def time_varying_random(
+    n_clients: int,
+    degree: int,
+    round_idx: int,
+    seed: int = 0,
+    drop_prob: float = 0.0,
+) -> np.ndarray:
+    """Time-varying topology (Fig. 2d): a random ``degree``-regular directed
+    graph per round, built from ``degree`` random cyclic permutations so that
+    *both* in-degree and out-degree are bounded by ``degree`` — the paper's
+    busiest-node constraint ("at most 10 neighbors") caps upload and download
+    alike.  ``drop_prob`` models the client-dropping experiment (App. B.6):
+    a dropped client neither sends nor receives this round.
+    """
+    if degree >= n_clients:
+        return fully_connected(n_clients)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, round_idx]))
+    a = np.eye(n_clients)
+    for _ in range(degree):
+        perm = rng.permutation(n_clients)
+        # rotate the permutation cycle so no client maps to itself
+        targets = perm[(np.argsort(perm) + 1) % n_clients]
+        a[np.arange(n_clients), targets] = 1.0
+    if drop_prob > 0.0:
+        alive = rng.random(n_clients) >= drop_prob
+        for k in range(n_clients):
+            if not alive[k]:
+                a[k, :] = 0.0
+                a[:, k] = 0.0
+                a[k, k] = 1.0
+    return a
+
+
+def busiest_node_degree(a: np.ndarray) -> int:
+    """Max #models any single node must *upload* (out-degree excl. self).
+
+    The paper's busiest-node communication metric counts the heaviest
+    uploader/downloader; with symmetric random sampling the upload side
+    (column sums) is the binding one.
+    """
+    out_deg = a.sum(axis=0) - np.diag(a)
+    in_deg = a.sum(axis=1) - np.diag(a)
+    return int(max(out_deg.max(), in_deg.max()))
+
+
+def mixing_matrix(a: np.ndarray) -> np.ndarray:
+    """Row-normalized adjacency (plain gossip average, used by D-PSGD)."""
+    return a / a.sum(axis=1, keepdims=True)
+
+
+def make_adjacency(
+    kind: str,
+    n_clients: int,
+    round_idx: int = 0,
+    degree: int = 10,
+    seed: int = 0,
+    drop_prob: float = 0.0,
+) -> np.ndarray:
+    if kind == "ring":
+        return ring(n_clients)
+    if kind in ("fc", "fully_connected"):
+        return fully_connected(n_clients)
+    if kind in ("random", "time_varying", "dynamic"):
+        return time_varying_random(n_clients, degree, round_idx, seed, drop_prob)
+    raise ValueError(f"unknown topology kind: {kind}")

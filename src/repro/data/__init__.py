@@ -1,0 +1,2 @@
+from repro.data.loader import ClientData, build_federated_image_task  # noqa: F401
+from repro.data.synthetic import Dataset, make_image_classification, make_lm_corpus  # noqa: F401

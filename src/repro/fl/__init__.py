@@ -1,0 +1,28 @@
+from repro.fl.base import FLConfig, FLResult, Task, make_cnn_task  # noqa: F401
+from repro.fl.centralized import (  # noqa: F401
+    run_ditto,
+    run_fedavg,
+    run_fomo,
+    run_local,
+    run_subfedavg,
+)
+from repro.fl.decentralized import run_dpsgd  # noqa: F401
+from repro.fl.dispfl import run_dispfl  # noqa: F401
+
+STRATEGIES = {
+    "local": run_local,
+    "fedavg": lambda t, c, cfg, **kw: run_fedavg(t, c, cfg, finetune=False, **kw),
+    "fedavg_ft": lambda t, c, cfg, **kw: run_fedavg(t, c, cfg, finetune=True, **kw),
+    "dpsgd": lambda t, c, cfg, **kw: run_dpsgd(t, c, cfg, finetune=False, **kw),
+    "dpsgd_ft": lambda t, c, cfg, **kw: run_dpsgd(t, c, cfg, finetune=True, **kw),
+    "ditto": run_ditto,
+    "fomo": run_fomo,
+    "subfedavg": run_subfedavg,
+    "dispfl": run_dispfl,
+}
+
+
+def run_strategy(name: str, task, clients, cfg, **kw) -> FLResult:
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown strategy '{name}'; available: {sorted(STRATEGIES)}")
+    return STRATEGIES[name](task, clients, cfg, **kw)

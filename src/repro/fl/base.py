@@ -1,0 +1,172 @@
+"""Shared substrate for all federated strategies.
+
+A ``Task`` bundles the model family used in the FL simulation (the paper's
+backbones or the fast small CNN) with jitted loss/grad/eval functions and the
+per-layer analytic FLOPs map used by the accounting.
+
+``local_sgd`` runs the paper's local phase: E epochs of minibatch SGD with
+fixed batch size (epochs are padded to whole batches so a single jitted step
+serves all clients), optional DisPFL-style gradient masking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn as cnn_mod
+from repro.models.common import softmax_xent
+from repro.optim import SGDConfig, init_sgd, masked_sgd_step, sgd_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    init_fn: Callable[[jax.Array], PyTree]
+    apply_fn: Callable[[PyTree, jax.Array], jax.Array]
+    fwd_flops: dict[str, float]          # per-sample forward FLOPs per weight leaf
+    n_classes: int
+
+    def __post_init__(self):
+        def loss(params, x, y):
+            return softmax_xent(self.apply_fn(params, x), y)
+
+        self._vg = jax.jit(jax.value_and_grad(loss))
+        self._acc = jax.jit(
+            lambda params, x, y: jnp.mean(
+                (jnp.argmax(self.apply_fn(params, x), -1) == y)))
+
+    def value_and_grad(self, params, x, y):
+        return self._vg(params, jnp.asarray(x), jnp.asarray(y))
+
+    def accuracy(self, params, x, y) -> float:
+        return float(self._acc(params, jnp.asarray(x), jnp.asarray(y)))
+
+
+def make_cnn_task(kind: str = "smallcnn", n_classes: int = 10, hw: int = 16,
+                  width: int = 16) -> Task:
+    if kind == "smallcnn":
+        return Task(
+            name="smallcnn",
+            init_fn=lambda key: cnn_mod.init_smallcnn(key, n_classes, width=width),
+            apply_fn=cnn_mod.smallcnn_apply,
+            fwd_flops=cnn_mod.smallcnn_fwd_flops(n_classes, hw, width),
+            n_classes=n_classes)
+    if kind == "resnet18":
+        return Task(
+            name="resnet18",
+            init_fn=lambda key: cnn_mod.init_resnet18(key, n_classes),
+            apply_fn=cnn_mod.resnet18_apply,
+            fwd_flops=cnn_mod.resnet18_fwd_flops(n_classes, hw),
+            n_classes=n_classes)
+    if kind == "vgg11":
+        return Task(
+            name="vgg11",
+            init_fn=lambda key: cnn_mod.init_vgg11(key, n_classes),
+            apply_fn=cnn_mod.vgg11_apply,
+            fwd_flops=cnn_mod.vgg11_fwd_flops(n_classes, hw),
+            n_classes=n_classes)
+    raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class FLConfig:
+    n_clients: int = 10
+    rounds: int = 20
+    local_epochs: int = 5
+    batch_size: int = 32
+    lr0: float = 0.1
+    lr_decay: float = 0.998
+    weight_decay: float = 5e-4
+    momentum: float = 0.0
+    topology: str = "random"            # random | ring | fc
+    degree: int = 10
+    seed: int = 0
+    drop_prob: float = 0.0
+    # sparsity (DisPFL / SubFedAvg)
+    density: float = 0.5
+    capacities: Optional[list[float]] = None   # per-client densities
+    alpha0: float = 0.5                  # initial prune rate (cosine annealed)
+    # Ditto / FOMO / fine-tuning
+    prox_lambda: float = 0.75
+    ft_epochs: int = 2
+    eval_every: int = 1
+
+    def lr_at(self, r: int) -> float:
+        return self.lr0 * (self.lr_decay ** r)
+
+    def client_density(self, k: int) -> float:
+        if self.capacities is not None:
+            return self.capacities[k]
+        return self.density
+
+
+@dataclasses.dataclass
+class FLResult:
+    acc_history: list[float]             # mean personalized test acc per eval
+    final_accs: list[float]
+    comm_busiest_mb: float               # per round
+    comm_rows: dict
+    flops_per_round: float               # per client
+    flops_rows: dict
+    rounds_to: dict[float, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def final_acc(self) -> float:
+        return float(np.mean(self.final_accs))
+
+
+def _pad_order(n: int, bs: int, rng: np.random.Generator) -> np.ndarray:
+    order = rng.permutation(n)
+    pad = (-len(order)) % bs
+    if pad:
+        order = np.concatenate([order, order[:pad]])
+    return order
+
+
+def local_sgd(
+    task: Task,
+    params: PyTree,
+    x: np.ndarray,
+    y: np.ndarray,
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    opt: SGDConfig,
+    rng: np.random.Generator,
+    mask: Optional[PyTree] = None,
+) -> PyTree:
+    """The paper's local phase (Alg. 1 lines 9-13)."""
+    state = init_sgd(params, opt)
+    bs = min(batch_size, len(y))
+    for _ in range(epochs):
+        order = _pad_order(len(y), bs, rng)
+        for i in range(0, len(order), bs):
+            sel = order[i: i + bs]
+            _, grads = task.value_and_grad(params, x[sel], y[sel])
+            if mask is not None:
+                params, state = masked_sgd_step(params, grads, mask, state, opt, lr)
+            else:
+                params, state = sgd_step(params, grads, state, opt, lr)
+    return params
+
+
+def evaluate_clients(task: Task, client_params: list[PyTree], clients) -> list[float]:
+    return [
+        task.accuracy(p, c.test_x, c.test_y)
+        for p, c in zip(client_params, clients)
+    ]
+
+
+def rounds_to_targets(history: list[float], targets: list[float]) -> dict[float, int]:
+    out = {}
+    for t in targets:
+        hit = next((i + 1 for i, a in enumerate(history) if a >= t), -1)
+        out[t] = hit
+    return out

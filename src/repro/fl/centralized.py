@@ -1,0 +1,317 @@
+"""Centralized baselines (paper §4.1 / App. B.4): Local, FedAvg, FedAvg-FT,
+Ditto, FOMO, SubFedAvg.
+
+All share the busiest-node constraint: the server touches at most
+``cfg.degree`` clients per round (matching the decentralized degree bound).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accounting import centralized_comm, decentralized_comm, sparse_training_flops
+from repro.core.evolve import evolve_mask_layer
+from repro.core.gossip import gossip_average_one
+from repro.core.masks import apply_mask, default_sparsifiable, erk_densities_for_params
+from repro.fl.base import (
+    FLConfig,
+    FLResult,
+    Task,
+    evaluate_clients,
+    local_sgd,
+    rounds_to_targets,
+)
+from repro.fl.decentralized import _finetune_all
+from repro.optim import SGDConfig, init_sgd, sgd_step
+from repro.utils.tree import (
+    tree_leaves_with_path,
+    tree_map_with_path,
+    tree_nnz,
+    tree_size,
+)
+
+
+def _mean_trees(trees, weights=None):
+    n = len(trees)
+    if weights is None:
+        weights = [1.0 / n] * n
+    acc = jax.tree.map(lambda x: weights[0] * x, trees[0])
+    for w, t in zip(weights[1:], trees[1:]):
+        acc = jax.tree.map(lambda a, x: a + w * x, acc, t)
+    return acc
+
+
+def _result(task, clients, cfg, history, final, comm, densities=None,
+            mask_batches=0, targets=(0.5,)):
+    n_samples = int(np.mean([c.n_train for c in clients]))
+    flops = sparse_training_flops(
+        task.fwd_flops, densities or {k: 1.0 for k in task.fwd_flops},
+        n_samples, cfg.local_epochs, mask_search_batches=mask_batches,
+        batch_size=cfg.batch_size)
+    return FLResult(
+        acc_history=history, final_accs=final,
+        comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
+        flops_per_round=flops.per_round_flops, flops_rows=flops.row(),
+        rounds_to=rounds_to_targets(history, list(targets)))
+
+
+# ---------------------------------------------------------------------------
+# Local-only
+# ---------------------------------------------------------------------------
+
+
+def run_local(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
+    rng = np.random.default_rng(cfg.seed)
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    params = [task.init_fn(k) for k in keys]
+    history = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        params = [
+            local_sgd(task, params[k], c.train_x, c.train_y, cfg.local_epochs,
+                      cfg.batch_size, lr, opt, rng)
+            for k, c in enumerate(clients)
+        ]
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+    final = evaluate_clients(task, params, clients)
+    comm = centralized_comm(0, [0], tree_size(params[0]))
+    return _result(task, clients, cfg, history, final, comm, targets=targets)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg / FedAvg-FT
+# ---------------------------------------------------------------------------
+
+
+def run_fedavg(task: Task, clients, cfg: FLConfig, finetune: bool = False,
+               targets=(0.5,)) -> FLResult:
+    k_clients = len(clients)
+    rng = np.random.default_rng(cfg.seed)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    w_global = task.init_fn(jax.random.PRNGKey(cfg.seed))
+    n_sel = min(cfg.degree, k_clients)
+    history = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        sel = rng.choice(k_clients, size=n_sel, replace=False)
+        locals_, sizes = [], []
+        for k in sel:
+            c = clients[k]
+            w = local_sgd(task, w_global, c.train_x, c.train_y,
+                          cfg.local_epochs, cfg.batch_size, lr, opt, rng)
+            locals_.append(w)
+            sizes.append(c.n_train)
+        weights = [s / sum(sizes) for s in sizes]
+        w_global = _mean_trees(locals_, weights)
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            eval_params = [w_global] * k_clients
+            if finetune:
+                eval_params = _finetune_all(task, eval_params, clients, cfg, lr, rng)
+            history.append(float(np.mean(evaluate_clients(task, eval_params, clients))))
+    final_params = [w_global] * k_clients
+    if finetune:
+        final_params = _finetune_all(task, final_params, clients, cfg,
+                                     cfg.lr_at(cfg.rounds), rng)
+    final = evaluate_clients(task, final_params, clients)
+    n_coords = tree_size(w_global)
+    comm = centralized_comm(n_sel, [n_coords] * n_sel, n_coords)
+    return _result(task, clients, cfg, history, final, comm, targets=targets)
+
+
+# ---------------------------------------------------------------------------
+# Ditto
+# ---------------------------------------------------------------------------
+
+
+def run_ditto(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
+    """Global FedAvg trajectory + per-client personal model with a proximal
+    pull toward the global model (Li et al. 2021b).  Per the paper's fair
+    budget: 3 epochs on the global model, 2 on the personal one."""
+    k_clients = len(clients)
+    rng = np.random.default_rng(cfg.seed)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    keyring = jax.random.split(jax.random.PRNGKey(cfg.seed), k_clients + 1)
+    w_global = task.init_fn(keyring[0])
+    personal = [task.init_fn(keyring[k + 1]) for k in range(k_clients)]
+    n_sel = min(cfg.degree, k_clients)
+    g_epochs = max(1, (cfg.local_epochs * 3) // 5)
+    p_epochs = max(1, cfg.local_epochs - g_epochs)
+    history = []
+
+    def prox_step(params, ref, x, y, lr):
+        loss, grads = task.value_and_grad(params, x, y)
+        grads = jax.tree.map(
+            lambda g, w, r: g + cfg.prox_lambda * (w - r), grads, params, ref)
+        return jax.tree.map(lambda w, g: w - lr * (g + cfg.weight_decay * w),
+                            params, grads)
+
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        sel = rng.choice(k_clients, size=n_sel, replace=False)
+        locals_, sizes = [], []
+        for k in sel:
+            c = clients[k]
+            w = local_sgd(task, w_global, c.train_x, c.train_y, g_epochs,
+                          cfg.batch_size, lr, opt, rng)
+            locals_.append(w)
+            sizes.append(c.n_train)
+            # personal model: prox-SGD toward the (old) global model
+            v = personal[k]
+            bs = min(cfg.batch_size, c.n_train)
+            for _ in range(p_epochs):
+                order = rng.permutation(c.n_train)
+                pad = (-len(order)) % bs
+                if pad:
+                    order = np.concatenate([order, order[:pad]])
+                for i in range(0, len(order), bs):
+                    s = order[i: i + bs]
+                    v = prox_step(v, w_global, c.train_x[s], c.train_y[s], lr)
+            personal[k] = v
+        weights = [s / sum(sizes) for s in sizes]
+        w_global = _mean_trees(locals_, weights)
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, personal, clients))))
+    final = evaluate_clients(task, personal, clients)
+    n_coords = tree_size(w_global)
+    comm = centralized_comm(n_sel, [n_coords] * n_sel, n_coords)
+    return _result(task, clients, cfg, history, final, comm, targets=targets)
+
+
+# ---------------------------------------------------------------------------
+# FOMO
+# ---------------------------------------------------------------------------
+
+
+def run_fomo(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
+    """First-order model optimization (Zhang et al. 2020): clients weight the
+    received models by the first-order utility
+        u_j = max(L_k(w_k) - L_k(w_j), 0) / ||w_j - w_k||
+    and move toward the useful ones before local training."""
+    k_clients = len(clients)
+    rng = np.random.default_rng(cfg.seed)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), k_clients)
+    params = [task.init_fn(k) for k in keys]
+    n_nbrs = min(cfg.degree, k_clients - 1)
+    history = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        new_params = []
+        for k in range(k_clients):
+            c = clients[k]
+            xb, yb = c.sample_batch(rng, cfg.batch_size)
+            own_loss, _ = task.value_and_grad(params[k], xb, yb)
+            nbrs = rng.choice([j for j in range(k_clients) if j != k],
+                              size=n_nbrs, replace=False)
+            mixed = params[k]
+            weights, deltas = [], []
+            for j in nbrs:
+                lj, _ = task.value_and_grad(params[j], xb, yb)
+                delta = jax.tree.map(jnp.subtract, params[j], params[k])
+                norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(d))
+                                          for d in jax.tree.leaves(delta)))) + 1e-8
+                u = max(float(own_loss) - float(lj), 0.0) / norm
+                weights.append(u)
+                deltas.append(delta)
+            tot = sum(weights)
+            if tot > 0:
+                for u, d in zip(weights, deltas):
+                    mixed = jax.tree.map(lambda m, x: m + (u / tot) * x, mixed, d)
+            w = local_sgd(task, mixed, c.train_x, c.train_y, cfg.local_epochs,
+                          cfg.batch_size, lr, opt, rng)
+            new_params.append(w)
+        params = new_params
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+    final = evaluate_clients(task, params, clients)
+    n_coords = tree_size(params[0])
+    comm = centralized_comm(min(cfg.degree, k_clients),
+                            [n_coords] * min(cfg.degree, k_clients), n_coords)
+    return _result(task, clients, cfg, history, final, comm, targets=targets)
+
+
+# ---------------------------------------------------------------------------
+# SubFedAvg (dense-to-sparse personalized subnetworks)
+# ---------------------------------------------------------------------------
+
+
+def run_subfedavg(task: Task, clients, cfg: FLConfig, prune_per_round: float = 0.05,
+                  targets=(0.5,)) -> FLResult:
+    """Vahidian et al. 2021: clients start dense and iteratively magnitude-
+    prune toward ``cfg.density`` as rounds progress; the server averages on
+    the unpruned intersections (same intersection math as DisPFL's gossip,
+    but star topology and dense-to-sparse)."""
+    k_clients = len(clients)
+    rng = np.random.default_rng(cfg.seed)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
+    params = [jax.tree.map(lambda x: x, w0) for _ in range(k_clients)]
+    masks = [jax.tree.map(lambda x: jnp.ones(x.shape, jnp.float32), w0)
+             for _ in range(k_clients)]
+    n_sel = min(cfg.degree, k_clients)
+    history = []
+    density_track = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        sel = list(rng.choice(k_clients, size=n_sel, replace=False))
+        # server-side intersection average for each selected client
+        averaged = {}
+        for k in sel:
+            others = [j for j in sel if j != k]
+            averaged[k] = gossip_average_one(
+                params[k], masks[k],
+                [params[j] for j in others], [masks[j] for j in others])
+        for k in sel:
+            c = clients[k]
+            w = local_sgd(task, averaged[k], c.train_x, c.train_y,
+                          cfg.local_epochs, cfg.batch_size, lr, opt, rng,
+                          mask=masks[k])
+            # dense-to-sparse: magnitude-prune a further slice per round
+            cur_density = _tree_density(masks[k])
+            if cur_density > cfg.density:
+                masks[k], w = _magnitude_prune(w, masks[k], prune_per_round,
+                                               cfg.density)
+            params[k] = w
+        density_track.append(float(np.mean([_tree_density(m) for m in masks])))
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+    final = evaluate_clients(task, params, clients)
+    n_coords = tree_size(w0)
+    nnz = [tree_nnz(m) for m in masks]
+    comm = centralized_comm(n_sel, sorted(nnz, reverse=True), n_coords)
+    mean_density = float(np.mean(density_track))
+    densities = {k: mean_density for k in task.fwd_flops}
+    return _result(task, clients, cfg, history, final, comm,
+                   densities=densities, targets=targets)
+
+
+def _tree_density(mask) -> float:
+    tot = tree_size(mask)
+    return tree_nnz(mask) / max(tot, 1)
+
+
+def _magnitude_prune(params, mask, rate: float, floor: float):
+    """Prune ``rate`` of remaining weights per sparsifiable layer (not below
+    ``floor`` density)."""
+    def one(path, w, m):
+        if not default_sparsifiable(path, w):
+            return m, w
+        n = int(np.prod(w.shape))
+        cur = int(jnp.sum(m > 0))
+        target = max(int(n * floor), int(cur * (1.0 - rate)))
+        if target >= cur:
+            return m, w
+        from repro.core.evolve import _exact_topk_mask
+        scores = jnp.where(m.reshape(-1) > 0, jnp.abs(w.reshape(-1)), -jnp.inf)
+        new_m = _exact_topk_mask(scores, target).reshape(w.shape)
+        return new_m.astype(m.dtype), w * new_m.astype(w.dtype)
+
+    paired = tree_map_with_path(one, params, mask)
+    new_mask = jax.tree.map(lambda t: t[0], paired,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda t: t[1], paired,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    return new_mask, new_params

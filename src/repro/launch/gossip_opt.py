@@ -1,0 +1,56 @@
+"""Collective-optimized gossip paths (§Perf).
+
+The baseline intersection gossip is an adjacency einsum over the stacked
+client dim in f32; GSPMD lowers it to an *all-gather of every client's full
+model (and mask)* over the client axis — O(K * params * 4B) bytes per device.
+For sparse topologies that is mostly waste: a client only needs its
+``degree`` neighbors.
+
+``ppermute_gossip`` implements the ring-topology gossip (paper Fig. 2b,
+Table 2) as ``jnp.roll`` over the client dim.  XLA lowers a roll over a
+sharded axis to ``collective-permute`` — each device exchanges with exactly
+two neighbors, O(2 * params) bytes regardless of K.  Two further wire
+optimizations vs the baseline einsum:
+
+  * weights travel in their storage dtype (bf16, 2x fewer bytes than the
+    f32 einsum operand);
+  * masks travel as int8 (4x fewer bytes than f32) and are only widened
+    locally for the divide.
+
+Same intersection-average math, so with a ring adjacency it is numerically
+identical to the einsum path up to the f32-vs-bf16 summand rounding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def ppermute_gossip(params: PyTree, masks: PyTree, plan=None,
+                    degree: int = 2) -> PyTree:
+    """Ring intersection-weighted gossip over the stacked client dim.
+
+    degree=2 exchanges with the +/-1 ring neighbors; degree=2h uses
+    +/-1..+/-h (each extra hop adds one collective-permute pair).
+    """
+    hops = max(1, degree // 2)
+
+    def mix(w, m):
+        mf = m.astype(jnp.float32)
+        wm = (w.astype(jnp.float32) * mf).astype(w.dtype)  # masked, bf16 wire
+        num = wm.astype(jnp.float32)
+        den = mf
+        for h in range(1, hops + 1):
+            # roll over the sharded client dim -> collective-permute of the
+            # bf16 weights and int8 masks (cheapest possible wire format)
+            num = num + jnp.roll(wm, h, axis=0).astype(jnp.float32) \
+                      + jnp.roll(wm, -h, axis=0).astype(jnp.float32)
+            den = den + jnp.roll(m, h, axis=0).astype(jnp.float32) \
+                      + jnp.roll(m, -h, axis=0).astype(jnp.float32)
+        return ((num / jnp.maximum(den, 1.0)) * mf).astype(w.dtype)
+
+    return jax.tree.map(mix, params, masks)

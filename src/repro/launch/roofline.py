@@ -1,0 +1,169 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+Hardware model (TPU v5e, per chip):
+    peak_flops = 197e12 FLOP/s (bf16)
+    hbm_bw     = 819e9  B/s
+    ici_bw     = 50e9   B/s per link (we assume 1 effective link per chip —
+                 conservative; v5e has more, so the collective term is an
+                 upper bound)
+
+Terms (seconds per step):
+    compute    = global_HLO_FLOPs   / (chips * peak_flops)
+    memory     = global_HLO_bytes   / (chips * hbm_bw)
+    collective = global_coll_bytes  / (chips * ici_bw)
+
+``cost_analysis()`` and the parsed HLO are *per-device* (post-SPMD), so the
+global quantities are per_device * chips and the terms reduce to
+per-device / per-chip-rate; both views are recorded.
+
+MODEL_FLOPS (the useful compute): 6*N*D for training (N = active params for
+MoE), 2*N*D for forward-only serving; D = tokens processed in the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    per_device_flops: float
+    per_device_bytes: float
+    per_device_coll_bytes: float
+    model_flops_global: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    step_s: float = 0.0
+    mfu: float = 0.0
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.per_device_flops / PEAK_FLOPS
+        self.memory_s = self.per_device_bytes / HBM_BW
+        self.collective_s = self.per_device_coll_bytes / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        hlo_global = self.per_device_flops * self.chips
+        self.useful_ratio = (self.model_flops_global / hlo_global
+                             if hlo_global else 0.0)
+        self.step_s = max(terms.values())
+        peak_total = self.chips * PEAK_FLOPS
+        self.mfu = (self.model_flops_global / (self.step_s * peak_total)
+                    if self.step_s else 0.0)
+        return self
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "bottleneck": self.bottleneck,
+            "useful_ratio": round(self.useful_ratio, 3),
+            "roofline_step_ms": round(self.step_s * 1e3, 3),
+            "mfu_bound": round(self.mfu, 3),
+        }
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count — MoE counts top_k + shared
+    experts, not the full expert bank.  Computed from config dims."""
+    from repro.configs.base import layer_kinds
+
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    # input-embedding lookups are gathers (0 matmul FLOPs); only the LM head
+    # projection contributes compute, tied or not
+    total = cfg.vocab * d
+    for sub in layer_kinds(cfg):
+        if sub.kind == "attn":
+            total += d * (cfg.n_heads * dh) * 2 + d * (cfg.n_kv_heads * dh) * 2
+        else:
+            spec = cfg.ssm
+            d_inner = spec.expand * d
+            n_heads = d_inner // spec.head_dim
+            d_in_proj = 2 * d_inner + 2 * spec.d_state + n_heads
+            total += d * d_in_proj + d_inner * d
+        if sub.ffn == "mlp":
+            ff = sub.d_ff_override or cfg.d_ff
+            mult = 3 if cfg.mlp_gated else 2
+            total += mult * d * ff
+        elif sub.ffn == "moe":
+            spec = cfg.moe
+            total += 3 * d * spec.d_expert * (spec.top_k + spec.n_shared)
+            total += d * spec.n_experts  # router
+    if cfg.enc_layers:
+        total += cfg.enc_layers * (4 * d * d + (3 if cfg.mlp_gated else 2) * d * cfg.d_ff)
+        # decoder cross-attention
+        total += cfg.n_layers * 4 * d * d
+    return float(total)
+
+
+def total_params(cfg) -> float:
+    """Full parameter count (MoE counts every expert)."""
+    from repro.configs.base import layer_kinds
+
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    total = cfg.vocab * d
+    if not cfg.tie_embeddings:
+        total += cfg.vocab * d
+    for sub in layer_kinds(cfg):
+        if sub.kind == "attn":
+            total += d * (cfg.n_heads * dh) * 2 + d * (cfg.n_kv_heads * dh) * 2
+        else:
+            spec = cfg.ssm
+            d_inner = spec.expand * d
+            n_heads = d_inner // spec.head_dim
+            d_in_proj = 2 * d_inner + 2 * spec.d_state + n_heads
+            total += d * d_in_proj + d_inner * d
+        if sub.ffn == "mlp":
+            ff = sub.d_ff_override or cfg.d_ff
+            total += (3 if cfg.mlp_gated else 2) * d * ff
+        elif sub.ffn == "moe":
+            spec = cfg.moe
+            total += 3 * d * spec.d_expert * (spec.n_experts + spec.n_shared)
+            total += d * spec.n_experts
+    if cfg.enc_layers:
+        total += cfg.enc_layers * (4 * d * d + (3 if cfg.mlp_gated else 2) * d * cfg.d_ff)
+        total += cfg.n_layers * 4 * d * d
+    return float(total)
+
+
+def model_flops(cfg, shape, density: float = 1.0) -> float:
+    """6*N_active*D for train, 2*N_active*D for serve steps.  ``density``
+    scales for DisPFL sparse models (coordinate density)."""
+    n = active_params(cfg) * density
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def build_report(arch_cfg, shape, mesh_name: str, chips: int,
+                 cost: dict, coll_bytes_per_device: float,
+                 density: float = 1.0) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    return RooflineReport(
+        arch=arch_cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        per_device_flops=flops, per_device_bytes=bts,
+        per_device_coll_bytes=coll_bytes_per_device,
+        model_flops_global=model_flops(arch_cfg, shape, density),
+    ).finalize()

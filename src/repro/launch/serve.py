@@ -1,0 +1,105 @@
+"""Personalized sparse serving demo: batched generation from per-client
+masked models (the serving counterpart of DisPFL — each request is routed to
+its owner's personalized sparse model).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
+        --clients 4 --batch 2 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16, dest="prompt_len")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SMOKE_ARCHS
+    from repro.core.masks import apply_mask, init_mask
+    from repro.models import bind
+    from repro.utils.tree import tree_stack
+
+    cfg = SMOKE_ARCHS[args.arch]
+    api = bind(cfg, remat=False)
+    k = args.clients
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), 2 * k)
+    params, masks = [], []
+    for i in range(k):
+        p = api.init(keys[i])
+        m = init_mask(keys[k + i], p, args.density)
+        params.append(apply_mask(p, m))
+        masks.append(m)
+    sp = tree_stack(params)
+
+    b, s0 = args.batch, args.prompt_len
+    max_len = s0 + args.gen
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (k, b, s0), 0, cfg.vocab)
+
+    extra = {}
+    if cfg.prefix_len:
+        extra["prefix"] = jnp.zeros((k, b, cfg.prefix_len, cfg.d_model))
+    if cfg.enc_layers:
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(9), (k, b, 8, cfg.d_model))
+
+    def make_cache():
+        if cfg.enc_layers:
+            return jax.vmap(lambda _: api.init_cache(b, max_len, enc_len=8))(
+                jnp.arange(k))
+        return jax.vmap(lambda _: api.init_cache(b, max_len))(jnp.arange(k))
+
+    cache = make_cache()
+
+    @jax.jit
+    def prefill(sp, prompts, cache, extra):
+        batch = {"tokens": prompts, **extra}
+        return jax.vmap(api.prefill)(sp, batch, cache)
+
+    @jax.jit
+    def decode(sp, toks, pos, cache):
+        logits, cache = jax.vmap(api.decode)(sp, toks, pos, cache)
+        nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    t0 = time.time()
+    logits, cache = prefill(sp, prompts, cache, extra)
+    nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    out_tokens = [nxt]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.full((k,), s0 + i, jnp.int32)
+        nxt, cache = decode(sp, nxt[:, :, None], pos, cache)
+        out_tokens.append(nxt)
+    t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], axis=-1)  # (K, B, gen)
+    report = {
+        "arch": cfg.name,
+        "clients": k,
+        "batch_per_client": b,
+        "prefill_s": round(t_prefill, 2),
+        "decode_s": round(t_decode, 2),
+        "tok_per_s": round(k * b * (args.gen - 1) / max(t_decode, 1e-9), 1),
+        "sample_generation_client0": gen[0, 0].tolist(),
+    }
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.registry import ModelAPI, bind  # noqa: F401

@@ -1,0 +1,221 @@
+"""Paper-faithful CIFAR backbones: ResNet18 and VGG11 with GroupNorm.
+
+The paper (App. B.2) uses torchvision-style ResNet18/VGG11 with every
+BatchNorm replaced by GroupNorm (Hsieh et al. 2020 motivate dropping BN in
+FL).  The CIFAR ResNet18 variant uses a 3x3 stem without max-pool.
+
+Besides init/apply, ``*_fwd_flops`` return per-weight-leaf forward FLOPs
+(multiply-add = 2 FLOPs) keyed by the *same paths* as the parameter pytree,
+so the ERK layer densities can be applied layer-wise — this is what lets the
+benchmark reproduce the paper's Table 1 FLOPS column (8.3e12 dense,
+~7.0e12 at density 0.5) analytically.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import groupnorm, groupnorm_init, lecun_init
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# conv helpers (NHWC, HWIO)
+# ---------------------------------------------------------------------------
+
+
+def conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    return {"w": lecun_init(key, (kh, kw, cin, cout), dtype, fan_in=fan_in)}
+
+
+def conv(params, x, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, params["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_flops(kh, kw, cin, cout, out_h, out_w):
+    return 2.0 * kh * kw * cin * cout * out_h * out_w
+
+
+# ---------------------------------------------------------------------------
+# ResNet18-GN (CIFAR variant)
+# ---------------------------------------------------------------------------
+
+RESNET18_STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]  # (width, first stride)
+
+
+def _basic_block_init(key, cin, cout, stride, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout, dtype),
+        "gn1": groupnorm_init(cout, dtype),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "gn2": groupnorm_init(cout, dtype),
+    }
+    if stride != 1 or cin != cout:
+        p["down"] = conv_init(ks[2], 1, 1, cin, cout, dtype)
+        p["gn_down"] = groupnorm_init(cout, dtype)
+    return p
+
+
+def _basic_block(p, x, stride):
+    y = conv(p["conv1"], x, stride)
+    y = jax.nn.relu(groupnorm(p["gn1"], y))
+    y = conv(p["conv2"], y, 1)
+    y = groupnorm(p["gn2"], y)
+    if "down" in p:
+        x = groupnorm(p["gn_down"], conv(p["down"], x, stride))
+    return jax.nn.relu(x + y)
+
+
+def init_resnet18(key, num_classes: int, dtype=jnp.float32) -> PyTree:
+    ks = jax.random.split(key, 10)
+    p: dict = {"stem": conv_init(ks[0], 3, 3, 3, 64, dtype),
+               "gn_stem": groupnorm_init(64, dtype)}
+    cin = 64
+    ki = 1
+    for si, (w, stride) in enumerate(RESNET18_STAGES):
+        for bi in range(2):
+            s = stride if bi == 0 else 1
+            p[f"s{si}b{bi}"] = _basic_block_init(ks[ki], cin, w, s, dtype)
+            cin = w
+            ki += 1
+    p["fc"] = {"w": lecun_init(ks[9], (512, num_classes), dtype, fan_in=512),
+               "b": jnp.zeros((num_classes,), dtype)}
+    return p
+
+
+def resnet18_apply(params, images: jax.Array) -> jax.Array:
+    """images: (B, 32, 32, 3) -> logits (B, classes)."""
+    x = jax.nn.relu(groupnorm(params["gn_stem"], conv(params["stem"], images, 1)))
+    for si, (w, stride) in enumerate(RESNET18_STAGES):
+        for bi in range(2):
+            s = stride if bi == 0 else 1
+            x = _basic_block(params[f"s{si}b{bi}"], x, s)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def resnet18_fwd_flops(num_classes: int, hw: int = 32) -> dict[str, float]:
+    """Per-conv-leaf forward FLOPs for one (hw, hw, 3) image."""
+    out: dict[str, float] = {}
+    h = hw
+    out["stem/w"] = conv_flops(3, 3, 3, 64, h, h)
+    cin = 64
+    for si, (w, stride) in enumerate(RESNET18_STAGES):
+        for bi in range(2):
+            s = stride if bi == 0 else 1
+            h_out = h // s
+            out[f"s{si}b{bi}/conv1/w"] = conv_flops(3, 3, cin, w, h_out, h_out)
+            out[f"s{si}b{bi}/conv2/w"] = conv_flops(3, 3, w, w, h_out, h_out)
+            if s != 1 or cin != w:
+                out[f"s{si}b{bi}/down/w"] = conv_flops(1, 1, cin, w, h_out, h_out)
+            cin = w
+            h = h_out
+    out["fc/w"] = 2.0 * 512 * num_classes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# VGG11-GN (CIFAR variant)
+# ---------------------------------------------------------------------------
+
+VGG11_CFG = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+def init_vgg11(key, num_classes: int, dtype=jnp.float32) -> PyTree:
+    n_convs = sum(1 for c in VGG11_CFG if c != "M")
+    ks = jax.random.split(key, n_convs + 1)
+    p: dict = {}
+    cin = 3
+    i = 0
+    for c in VGG11_CFG:
+        if c == "M":
+            continue
+        p[f"conv{i}"] = conv_init(ks[i], 3, 3, cin, c, dtype)
+        p[f"gn{i}"] = groupnorm_init(c, dtype)
+        cin = c
+        i += 1
+    p["fc"] = {"w": lecun_init(ks[-1], (512, num_classes), dtype, fan_in=512),
+               "b": jnp.zeros((num_classes,), dtype)}
+    return p
+
+
+def vgg11_apply(params, images: jax.Array) -> jax.Array:
+    x = images
+    i = 0
+    for c in VGG11_CFG:
+        if c == "M":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        else:
+            x = jax.nn.relu(groupnorm(params[f"gn{i}"], conv(params[f"conv{i}"], x, 1)))
+            i += 1
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def vgg11_fwd_flops(num_classes: int, hw: int = 32) -> dict[str, float]:
+    out: dict[str, float] = {}
+    h = hw
+    cin = 3
+    i = 0
+    for c in VGG11_CFG:
+        if c == "M":
+            h //= 2
+        else:
+            out[f"conv{i}/w"] = conv_flops(3, 3, cin, c, h, h)
+            cin = c
+            i += 1
+    out["fc/w"] = 2.0 * 512 * num_classes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Small CNN (fast CPU experiments / tests)
+# ---------------------------------------------------------------------------
+
+
+def init_smallcnn(key, num_classes: int, dtype=jnp.float32, width: int = 16,
+                  in_ch: int = 3) -> PyTree:
+    ks = jax.random.split(key, 4)
+    return {
+        "conv0": conv_init(ks[0], 3, 3, in_ch, width, dtype),
+        "gn0": groupnorm_init(width, dtype),
+        "conv1": conv_init(ks[1], 3, 3, width, 2 * width, dtype),
+        "gn1": groupnorm_init(2 * width, dtype),
+        "conv2": conv_init(ks[2], 3, 3, 2 * width, 4 * width, dtype),
+        "gn2": groupnorm_init(4 * width, dtype),
+        "fc": {"w": lecun_init(ks[3], (4 * width, num_classes), dtype, fan_in=4 * width),
+               "b": jnp.zeros((num_classes,), dtype)},
+    }
+
+
+def smallcnn_apply(params, images: jax.Array) -> jax.Array:
+    x = jax.nn.relu(groupnorm(params["gn0"], conv(params["conv0"], images, 2)))
+    x = jax.nn.relu(groupnorm(params["gn1"], conv(params["conv1"], x, 2)))
+    x = jax.nn.relu(groupnorm(params["gn2"], conv(params["conv2"], x, 2)))
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def smallcnn_fwd_flops(num_classes: int, hw: int = 32, width: int = 16,
+                       in_ch: int = 3) -> dict[str, float]:
+    h = hw // 2
+    out = {"conv0/w": conv_flops(3, 3, in_ch, width, h, h)}
+    h //= 2
+    out["conv1/w"] = conv_flops(3, 3, width, 2 * width, h, h)
+    h //= 2
+    out["conv2/w"] = conv_flops(3, 3, 2 * width, 4 * width, h, h)
+    out["fc/w"] = 2.0 * 4 * width * num_classes
+    return out
+
+
+def count_params(tree: PyTree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

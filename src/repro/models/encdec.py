@@ -1,0 +1,174 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The encoder consumes *precomputed frame embeddings* (B, S_enc, d) — the
+audio frontend (mel + conformer conv) is the allowed stub — and runs
+bidirectional self-attention layers.  The decoder is a causal LM stack with
+cross-attention into the encoder outputs.
+
+Caching: cross-attention K/V are computed once at prefill and carried in the
+decode cache alongside the self-attention KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import embed_init, embed_lookup, lecun_init, rmsnorm, rmsnorm_init
+from repro.models.lm import _head, _mlp_apply, _mlp_init
+from repro.utils.tree import tree_stack
+
+PyTree = Any
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_mod.attn_init(ks[0], cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": _mlp_init(ks[1], cfg, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attn_mod.attn_init(ks[0], cfg, dtype),
+        "norm_x": rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": attn_mod.attn_init(ks[1], cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": _mlp_init(ks[2], cfg, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    ks = jax.random.split(key, 4)
+    enc = [_enc_layer_init(k, cfg, dtype)
+           for k in jax.random.split(ks[0], cfg.enc_layers)]
+    dec = [_dec_layer_init(k, cfg, dtype)
+           for k in jax.random.split(ks[1], cfg.n_layers)]
+    return {
+        "embed": {"table": embed_init(ks[2], (cfg.vocab, cfg.d_model), dtype)},
+        "encoder": tree_stack(enc),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "decoder": tree_stack(dec),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _sinusoidal_pos(s: int, d: int, dtype) -> jax.Array:
+    """Length-agnostic sinusoidal encoder positions (frame counts vary from
+    seconds of audio to half-hour streams; a learned table would cap them)."""
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, unroll: bool = False):
+    """frames: (B, S_enc, d) stub embeddings -> (B, S_enc, d)."""
+    b, s, _ = frames.shape
+    x = frames + _sinusoidal_pos(s, cfg.d_model, frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = attn_mod._qkv(p["attn"], h, cfg, positions)
+        mask = jnp.ones((s, s), bool)  # bidirectional
+        y = attn_mod._sdpa(q, k, v, cfg, mask)
+        from repro.models.common import dense
+        x = x + dense(p["attn"]["wo"], y.reshape(b, s, -1))
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + _mlp_apply(p["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["encoder"], unroll=unroll)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(p, x, cfg, positions, cross_kv, cache=None, pos=None):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    y, cache = attn_mod.attention(p["self_attn"], h, positions, cfg,
+                                  cache=cache, pos=pos)
+    x = x + y
+    h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+    y, _ = attn_mod.attention(p["cross_attn"], h, positions, cfg,
+                              cross_kv=cross_kv)
+    x = x + y
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    x = x + _mlp_apply(p["mlp"], h, cfg)
+    return x, cache
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+                      dtype=jnp.float32) -> PyTree:
+    dh = cfg.resolved_head_dim
+    self_kv = [attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+               for _ in range(cfg.n_layers)]
+    cross = [{"k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, dh), dtype),
+              "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, dh), dtype)}
+             for _ in range(cfg.n_layers)]
+    return {"self": tree_stack(self_kv), "cross": tree_stack(cross)}
+
+
+def decode_train(params, frames, tokens, cfg: ModelConfig, remat: bool = True,
+                 unroll: bool = False):
+    """Teacher-forced training pass.  Returns (logits, aux=0)."""
+    enc_out = encode(params, frames, cfg, unroll=unroll)
+    x = embed_lookup(params["embed"]["table"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer(x, p):
+        kv = attn_mod.cross_kv_from_encoder(p["cross_attn"], enc_out, cfg)
+        x, _ = _dec_layer(p, x, cfg, positions, kv)
+        return x, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params["decoder"],
+                        unroll=unroll)
+    return _head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, cache, unroll: bool = False):
+    """Encode + teacher-forced decoder prefill; fills self+cross caches."""
+    enc_out = encode(params, frames, cfg, unroll=unroll)
+    x = embed_lookup(params["embed"]["table"], tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def layer(x, inp):
+        p, c_self = inp
+        kv = attn_mod.cross_kv_from_encoder(p["cross_attn"], enc_out, cfg)
+        x, c = _dec_layer(p, x, cfg, positions, kv, cache=c_self)
+        return x, (c, {"k": kv[0], "v": kv[1]})
+
+    x, (self_c, cross_c) = jax.lax.scan(layer, x, (params["decoder"], cache["self"]),
+                                        unroll=unroll)
+    logits = _head(params, x[:, -1:, :], cfg)
+    return logits, {"self": self_c, "cross": cross_c}
+
+
+def decode_step(params, tokens, pos, cfg: ModelConfig, cache, unroll: bool = False):
+    """One-token decode using cached self KV + cross KV."""
+    x = embed_lookup(params["embed"]["table"], tokens)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (b, 1))
+
+    def layer(x, inp):
+        p, c_self, c_cross = inp
+        kv = (c_cross["k"], c_cross["v"])
+        x, c = _dec_layer(p, x, cfg, positions, kv, cache=c_self, pos=pos)
+        return x, c
+
+    x, self_c = jax.lax.scan(
+        layer, x, (params["decoder"], cache["self"], cache["cross"]),
+        unroll=unroll)
+    return _head(params, x, cfg), {"self": self_c, "cross": cache["cross"]}

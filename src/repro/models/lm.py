@@ -1,0 +1,367 @@
+"""Decoder-only LM stack covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers are grouped into repeating *period blocks* (period = lcm of the
+local/global, MoE and hybrid interleave periods) and executed with
+``jax.lax.scan`` over stacked block parameters, so a 72-layer Jamba lowers to
+a small HLO.  Layers outside the periodic body (a special first layer, or a
+non-divisible tail) are unrolled.
+
+Modes:
+  * ``forward_train``   — full sequence, returns (logits, aux_loss)
+  * ``forward_prefill`` — full sequence, writes KV/SSM caches
+  * ``forward_decode``  — one token at position ``pos`` with caches
+
+VLM/audio decoder-only variants accept ``prefix`` — precomputed patch/frame
+embeddings (B, P, d) occupying the first P positions (the allowed frontend
+stub); labels over the prefix must be -1 (ignored) in the loss.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SubLayer, layer_kinds
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    activation,
+    dense,
+    embed_init,
+    embed_lookup,
+    lecun_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+from repro.sharding import constrain
+from repro.utils.tree import tree_stack
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Structure resolution
+# ---------------------------------------------------------------------------
+
+
+def intrinsic_period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.local_period > 0:
+        p = math.lcm(p, cfg.local_period)
+    if cfg.moe is not None and cfg.moe_period > 1:
+        p = math.lcm(p, cfg.moe_period)
+    if cfg.ssm is not None and cfg.attn_period > 0:
+        p = math.lcm(p, cfg.attn_period)
+    return p
+
+
+def layer_plan(cfg: ModelConfig):
+    """Returns (prelude_idx, period, n_blocks, tail_idx, kinds)."""
+    kinds = layer_kinds(cfg)
+    prelude = [0] if cfg.dense_ff_first > 0 else []
+    start = len(prelude)
+    period = intrinsic_period(cfg)
+    body = cfg.n_layers - start
+    n_blocks = body // period
+    tail_start = start + n_blocks * period
+    tail = list(range(tail_start, cfg.n_layers))
+    return prelude, period, n_blocks, tail, kinds
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, cfg, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gated:
+        return {
+            "w_gate": lecun_init(ks[0], (cfg.d_model, d_ff), dtype),
+            "w_up": lecun_init(ks[1], (cfg.d_model, d_ff), dtype),
+            "w_down": lecun_init(ks[2], (d_ff, cfg.d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_up": lecun_init(ks[0], (cfg.d_model, d_ff), dtype),
+        "w_down": lecun_init(ks[1], (d_ff, cfg.d_model), dtype, fan_in=d_ff),
+    }
+
+
+def _mlp_apply(p, x, cfg):
+    act = activation(cfg.act)
+    h = x @ p["w_up"]
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    h = constrain(h, ("batch_noshard", "seq", "ffn"))
+    return h @ p["w_down"]
+
+
+def layer_init(key, cfg: ModelConfig, sub: SubLayer, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if sub.kind == "attn":
+        p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+    if sub.ffn == "mlp":
+        d_ff = sub.d_ff_override or cfg.d_ff
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mlp"] = _mlp_init(ks[1], cfg, d_ff, dtype)
+    elif sub.ffn == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def layer_cache_init(cfg: ModelConfig, sub: SubLayer, batch: int, max_len: int, dtype):
+    if sub.kind == "attn":
+        return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+
+
+def layer_apply(p, x, sub: SubLayer, cfg: ModelConfig, positions,
+                cache=None, pos=None, moe_dense: bool = False):
+    """Pre-norm residual layer.  Returns (x, cache_out, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if sub.kind == "attn":
+        y, cache = attn_mod.attention(p["attn"], h, positions, cfg,
+                                      window=sub.window, cache=cache, pos=pos)
+    else:
+        if pos is None and cache is None:
+            y, cache = ssm_mod.ssm_apply(p["ssm"], h, cfg, cache=None)
+        elif pos is None:
+            y, cache = ssm_mod.ssm_apply(p["ssm"], h, cfg, cache=cache)
+        else:
+            y, cache = ssm_mod.ssm_decode_step(p["ssm"], h, cfg, cache)
+    x = x + y
+    if sub.ffn == "mlp":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + _mlp_apply(p["mlp"], h, cfg)
+    elif sub.ffn == "moe":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if moe_dense:
+            y, a = moe_mod.moe_dense_ref(p["moe"], h, cfg.moe, cfg.act)
+        else:
+            y, a = moe_mod.moe_apply(p["moe"], h, cfg.moe, cfg.act)
+        x = x + y
+        aux = aux + a
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
+    n_keys = 3 + len(prelude) + n_blocks * period + len(tail)
+    ks = iter(jax.random.split(key, n_keys))
+    params: dict = {"embed": {"table": embed_init(next(ks), (cfg.vocab, cfg.d_model), dtype)}}
+    if prelude:
+        params["prelude"] = {
+            str(i): layer_init(next(ks), cfg, kinds[i], dtype) for i in prelude
+        }
+    if n_blocks > 0:
+        blocks = {}
+        start = len(prelude)
+        for j in range(period):
+            per_block = [
+                layer_init(next(ks), cfg, kinds[start + b * period + j], dtype)
+                for b in range(n_blocks)
+            ]
+            blocks[f"p{j}"] = tree_stack(per_block)
+        params["blocks"] = blocks
+    if tail:
+        params["tail"] = {
+            str(i): layer_init(next(ks), cfg, kinds[i], dtype) for i in tail
+        }
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": lecun_init(next(ks), (cfg.d_model, cfg.vocab), dtype)}
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32) -> PyTree:
+    prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
+    cache: dict = {}
+    if prelude:
+        cache["prelude"] = {
+            str(i): layer_cache_init(cfg, kinds[i], batch, max_len, dtype) for i in prelude
+        }
+    if n_blocks > 0:
+        start = len(prelude)
+        blocks = {}
+        for j in range(period):
+            per_block = [
+                layer_cache_init(cfg, kinds[start + b * period + j], batch, max_len, dtype)
+                for b in range(n_blocks)
+            ]
+            blocks[f"p{j}"] = tree_stack(per_block)
+        cache["blocks"] = blocks
+    if tail:
+        cache["tail"] = {
+            str(i): layer_cache_init(cfg, kinds[i], batch, max_len, dtype) for i in tail
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg, prefix=None):
+    x = embed_lookup(params["embed"]["table"], tokens)
+    if cfg.family in ("vlm", "audio") or prefix is not None:
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _head(params, x, cfg):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["head"], x)
+    if cfg.logit_softcap > 0:
+        lf = logits.astype(jnp.float32)
+        logits = (jnp.tanh(lf / cfg.logit_softcap) * cfg.logit_softcap).astype(logits.dtype)
+    return constrain(logits, ("batch_noshard", "seq", "vocab"))
+
+
+def _sub_for(cfg, kinds, idx):
+    return kinds[idx]
+
+
+def forward_train(params, tokens, cfg: ModelConfig, prefix=None, remat: bool = True,
+                  unroll: bool = False, remat_policy: str = "full"):
+    """tokens: (B, S_text); prefix: optional (B, P, d).  Returns
+    (logits (B, S_total, V), aux_loss scalar)."""
+    prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
+    x = _embed(params, tokens, cfg, prefix)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i in prelude:
+        x, _, a = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg, positions)
+        aux_total += a
+
+    if n_blocks > 0:
+        start = len(prelude)
+
+        def block_fn(x, block_params):
+            aux = jnp.zeros((), jnp.float32)
+            for j in range(period):
+                sub = kinds[start + j]  # same structure for every block
+                x, _, a = layer_apply(block_params[f"p{j}"], x, sub, cfg, positions)
+                aux += a
+            return x, aux
+
+        if not remat:
+            body = block_fn
+        elif remat_policy == "dots":
+            # NOTE: dots_with_no_batch_dims_saveable is useless here — the
+            # client vmap gives every dot a batch dim; save all dot outputs
+            body = jax.checkpoint(
+                block_fn, policy=jax.checkpoint_policies.dots_saveable)
+        else:
+            body = jax.checkpoint(block_fn)
+        x, auxs = jax.lax.scan(lambda c, p: body(c, p), x, params["blocks"],
+                               unroll=unroll)
+        aux_total += jnp.sum(auxs)
+
+    for i in tail:
+        x, _, a = layer_apply(params["tail"][str(i)], x, kinds[i], cfg, positions)
+        aux_total += a
+
+    return _head(params, x, cfg), aux_total
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
+                    unroll: bool = False):
+    """Full-sequence forward writing caches.  Returns (logits, cache)."""
+    prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
+    x = _embed(params, tokens, cfg, prefix)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    new_cache: dict = {k: {} for k in cache}
+
+    for i in prelude:
+        x, c, _ = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg,
+                              positions, cache=cache["prelude"][str(i)])
+        new_cache["prelude"][str(i)] = c
+
+    if n_blocks > 0:
+        start = len(prelude)
+
+        def block_fn(x, inp):
+            block_params, block_cache = inp
+            outs = {}
+            for j in range(period):
+                sub = kinds[start + j]
+                x, c, _ = layer_apply(block_params[f"p{j}"], x, sub, cfg,
+                                      positions, cache=block_cache[f"p{j}"])
+                outs[f"p{j}"] = c
+            return x, outs
+
+        x, blocks_cache = jax.lax.scan(
+            block_fn, x, (params["blocks"], cache["blocks"]), unroll=unroll)
+        new_cache["blocks"] = blocks_cache
+
+    for i in tail:
+        x, c, _ = layer_apply(params["tail"][str(i)], x, kinds[i], cfg,
+                              positions, cache=cache["tail"][str(i)])
+        new_cache["tail"][str(i)] = c
+
+    logits = _head(params, x[:, -1:, :], cfg)
+    return logits, new_cache
+
+
+def forward_decode(params, tokens, pos, cfg: ModelConfig, cache,
+                   unroll: bool = False):
+    """One-token decode.  tokens: (B, 1); pos: scalar int32 (current write
+    position, == number of tokens already in cache).  Returns (logits, cache)."""
+    prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
+    x = embed_lookup(params["embed"]["table"], tokens)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None] if pos.ndim == 0 else pos, (b, 1))
+    new_cache: dict = {k: {} for k in cache}
+
+    for i in prelude:
+        x, c, _ = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg,
+                              positions, cache=cache["prelude"][str(i)], pos=pos)
+        new_cache["prelude"][str(i)] = c
+
+    if n_blocks > 0:
+        start = len(prelude)
+
+        def block_fn(x, inp):
+            block_params, block_cache = inp
+            outs = {}
+            for j in range(period):
+                sub = kinds[start + j]
+                x, c, _ = layer_apply(block_params[f"p{j}"], x, sub, cfg,
+                                      positions, cache=block_cache[f"p{j}"], pos=pos)
+                outs[f"p{j}"] = c
+            return x, outs
+
+        x, blocks_cache = jax.lax.scan(
+            block_fn, x, (params["blocks"], cache["blocks"]), unroll=unroll)
+        new_cache["blocks"] = blocks_cache
+
+    for i in tail:
+        x, c, _ = layer_apply(params["tail"][str(i)], x, kinds[i], cfg,
+                              positions, cache=cache["tail"][str(i)], pos=pos)
+        new_cache["tail"][str(i)] = c
+
+    return _head(params, x, cfg), new_cache

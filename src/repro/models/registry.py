@@ -1,0 +1,153 @@
+"""Uniform model API over all families.
+
+``bind(cfg)`` returns a ``ModelAPI`` whose methods take/return plain pytrees:
+
+  init(key, dtype)                      -> params
+  train_loss(params, batch)             -> (loss, aux_metrics)
+  prefill(params, batch, cache)         -> (logits, cache)
+  decode(params, tokens, pos, cache)    -> (logits, cache)
+  init_cache(batch_size, max_len, dtype)-> cache
+  input_specs(shape, dtype, batch)      -> batch pytree of ShapeDtypeStructs
+
+Batch layout (per client, no client axis here — the launcher stacks):
+  train  : {'tokens': (B,S_t) i32, 'labels': (B,S) i32, ['prefix'|'frames']}
+  prefill: {'tokens': (B,S_t) i32, ['prefix'|'frames']}
+  decode : tokens (B,1) i32 + pos scalar i32
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.common import softmax_xent
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+def _enc_dec_split(seq_len: int) -> tuple[int, int]:
+    """Audio enc-dec: half the token budget to frames, half to text."""
+    return seq_len // 2, seq_len - seq_len // 2
+
+
+def bind(cfg: ModelConfig, moe_dense: bool = False, remat: bool = True,
+         unroll: bool = False, remat_policy: str = "full") -> ModelAPI:
+    if cfg.enc_layers > 0:
+        return _bind_encdec(cfg, remat, unroll)
+    return _bind_lm(cfg, moe_dense, remat, unroll, remat_policy)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _bind_lm(cfg: ModelConfig, moe_dense: bool, remat: bool,
+             unroll: bool = False, remat_policy: str = "full") -> ModelAPI:
+    def init(key, dtype=jnp.float32):
+        return lm_mod.init_lm(key, cfg, dtype)
+
+    def train_loss(params, batch):
+        prefix = batch.get("prefix")
+        logits, aux = lm_mod.forward_train(params, batch["tokens"], cfg,
+                                           prefix=prefix, remat=remat,
+                                           unroll=unroll,
+                                           remat_policy=remat_policy)
+        loss = softmax_xent(logits, batch["labels"])
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    def prefill(params, batch, cache):
+        return lm_mod.forward_prefill(params, batch["tokens"], cfg, cache,
+                                      prefix=batch.get("prefix"), unroll=unroll)
+
+    def decode(params, tokens, pos, cache):
+        return lm_mod.forward_decode(params, tokens, pos, cfg, cache,
+                                     unroll=unroll)
+
+    def init_cache(batch_size, max_len, dtype=jnp.float32):
+        return lm_mod.init_cache(cfg, batch_size, max_len, dtype)
+
+    def input_specs(shape: InputShape, dtype=jnp.float32, batch: Optional[int] = None):
+        b = batch if batch is not None else shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        if shape.mode == "train":
+            spec = {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.prefix_len), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.prefix_len:
+                spec["prefix"] = jax.ShapeDtypeStruct(
+                    (b, cfg.prefix_len, cfg.d_model), dtype)
+            return spec
+        if shape.mode == "prefill":
+            spec = {"tokens": jax.ShapeDtypeStruct((b, s - cfg.prefix_len), i32)}
+            if cfg.prefix_len:
+                spec["prefix"] = jax.ShapeDtypeStruct(
+                    (b, cfg.prefix_len, cfg.d_model), dtype)
+            return spec
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, init_cache, input_specs)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (audio)
+# ---------------------------------------------------------------------------
+
+
+def _bind_encdec(cfg: ModelConfig, remat: bool, unroll: bool = False) -> ModelAPI:
+    def init(key, dtype=jnp.float32):
+        return encdec_mod.init_encdec(key, cfg, dtype)
+
+    def train_loss(params, batch):
+        logits, aux = encdec_mod.decode_train(
+            params, batch["frames"], batch["tokens"], cfg, remat=remat,
+            unroll=unroll)
+        loss = softmax_xent(logits, batch["labels"])
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    def prefill(params, batch, cache):
+        return encdec_mod.prefill(params, batch["frames"], batch["tokens"],
+                                  cfg, cache, unroll=unroll)
+
+    def decode(params, tokens, pos, cache):
+        return encdec_mod.decode_step(params, tokens, pos, cfg, cache,
+                                      unroll=unroll)
+
+    def init_cache(batch_size, max_len, dtype=jnp.float32, enc_len: int = 1024):
+        return encdec_mod.init_encdec_cache(cfg, batch_size, max_len, enc_len, dtype)
+
+    def input_specs(shape: InputShape, dtype=jnp.float32, batch: Optional[int] = None):
+        b = batch if batch is not None else shape.global_batch
+        i32 = jnp.int32
+        if shape.mode in ("train", "prefill"):
+            enc_len, dec_len = _enc_dec_split(shape.seq_len)
+            spec = {
+                "frames": jax.ShapeDtypeStruct((b, enc_len, cfg.d_model), dtype),
+                "tokens": jax.ShapeDtypeStruct((b, dec_len), i32),
+            }
+            if shape.mode == "train":
+                spec["labels"] = jax.ShapeDtypeStruct((b, dec_len), i32)
+            return spec
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    return ModelAPI(cfg, init, train_loss, prefill, decode, init_cache, input_specs)

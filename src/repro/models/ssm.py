@@ -1,0 +1,219 @@
+"""Mamba-2 blocks via the SSD (state-space duality) chunked algorithm.
+
+Implements the full Mamba-2 mixer (arXiv:2405.21060): fused in-projection
+(z, x, B, C, dt), depthwise causal conv over (x, B, C), softplus dt with
+bias, scalar-per-head A, chunked SSD scan, D skip, gated RMSNorm, output
+projection.  Single dispatch group (G=1), heads H = d_inner / head_dim.
+
+Three entry points:
+  * ``ssm_apply``      — full sequence (training / prefill), chunked SSD with
+                         a lax.scan over chunks for the inter-chunk state
+                         recurrence (sub-quadratic in S: O(S * Q) with chunk
+                         size Q).
+  * ``ssm_decode_step``— O(1)-per-token recurrent update with carried
+                         (ssm_state, conv_state) — this is what makes
+                         long_500k decode tractable.
+  * caches from ``init_ssm_cache``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import lecun_init, rmsnorm_init
+from repro.sharding import constrain
+
+
+def _dims(cfg):
+    spec = cfg.ssm
+    d_inner = spec.expand * cfg.d_model
+    n_heads = d_inner // spec.head_dim
+    conv_dim = d_inner + 2 * spec.d_state
+    return spec, d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg, dtype):
+    spec, d_inner, n_heads, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * spec.d_state + n_heads
+    ks = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[2], (n_heads,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    a_init = jnp.log(jnp.linspace(1.0, 16.0, n_heads))
+    return {
+        "in_proj": lecun_init(ks[0], (cfg.d_model, d_in_proj), dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_width, conv_dim), jnp.float32)
+                   * (spec.conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": a_init.astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": lecun_init(ks[3], (d_inner, cfg.d_model), dtype, fan_in=d_inner),
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    spec, d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, n_heads, spec.head_dim, spec.d_state), jnp.float32),
+        "conv_state": jnp.zeros((batch, spec.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def _gated_norm(norm_params, y, z, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    out = yf * jax.lax.rsqrt(var + eps)
+    return out * (1.0 + norm_params["scale"].astype(jnp.float32))
+
+
+def _split_proj(cfg, zxbcdt):
+    spec, d_inner, n_heads, _ = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * spec.d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _conv_full(params, xbc):
+    """Depthwise causal conv over (B, L, C_conv)."""
+    w = params["conv_w"].astype(jnp.float32)  # (W, C)
+    width = w.shape[0]
+    xf = xbc.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xf)
+    for i in range(width):
+        out = out + pad[:, i: i + xf.shape[1], :] * w[i]
+    out = out + params["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _segsum(dA):
+    """dA: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, chunk):
+    """SSD over chunks.
+
+    xh: (B, L, H, P)   inputs per head
+    dt: (B, L, H)      softplus'd step sizes
+    a:  (H,)           -exp(A_log), negative
+    Bm, Cm: (B, L, N)  shared across heads (G=1)
+    Returns y: (B, L, H, P) and final state (B, H, P, N).
+    """
+    b, l, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    nc = l // q
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+
+    xh = (xh * dt[..., None]).reshape(b, nc, q, h, p).astype(jnp.float32)
+    dA = (dt * a).reshape(b, nc, q, h)          # (B,C,Q,H) log decay
+    dA = jnp.moveaxis(dA, -1, 2)                # (B,C,H,Q)
+    Bc = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+
+    # -- intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA))                    # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores,
+                        L, xh)
+
+    # -- chunk states (right factors)
+    cum = jnp.cumsum(dA, axis=-1)               # (B,C,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,C,H,Q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_to_end, xh)
+
+    # -- inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])          # (B,C,H)
+
+    def step(carry, inp):
+        st, dec = inp                            # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev                         # emit state BEFORE this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,C,H,P,N)
+
+    # -- contribution of carried-in states
+    decay_in = jnp.exp(cum)                      # (B,C,H,Q)
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssm_apply(params, x: jax.Array, cfg, cache=None):
+    """Full-sequence Mamba-2 block.  Returns (y, new_cache).
+
+    If ``cache`` is given (prefill), the final SSD state and conv tail are
+    written into it for subsequent decode steps.
+    """
+    spec, d_inner, n_heads, conv_dim = _dims(cfg)
+    b, l, _ = x.shape
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_conv = _conv_full(params, xbc)
+    xs = xbc_conv[..., :d_inner]
+    Bm = xbc_conv[..., d_inner: d_inner + spec.d_state]
+    Cm = xbc_conv[..., d_inner + spec.d_state:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    xh = xs.reshape(b, l, n_heads, spec.head_dim)
+    xh = constrain(xh, ("batch_noshard", "seq", "heads", "head_dim"))
+    y, final_state = _ssd_chunked(xh.astype(jnp.float32), dtv, a, Bm, Cm, spec.chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner)
+    y = _gated_norm(params["norm"], y, z, cfg.norm_eps)
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    if cache is not None:
+        tail = xbc[:, -(spec.conv_width - 1):, :]
+        cache = {"ssm_state": final_state,
+                 "conv_state": tail.astype(cache["conv_state"].dtype)}
+    return out, cache
+
+
+def ssm_decode_step(params, x: jax.Array, cfg, cache: dict):
+    """Single-token recurrent step.  x: (B, 1, d)."""
+    spec, d_inner, n_heads, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = x[:, 0, :] @ params["in_proj"]      # (B, d_in_proj)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # depthwise conv via cached tail
+    conv_state = cache["conv_state"]             # (B, W-1, conv_dim)
+    window = jnp.concatenate([conv_state.astype(jnp.float32),
+                              xbc.astype(jnp.float32)[:, None, :]], axis=1)
+    w = params["conv_w"].astype(jnp.float32)     # (W, conv_dim)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"].astype(jnp.float32)
+    xbc_c = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :].astype(conv_state.dtype)
+
+    xs = xbc_c[..., :d_inner]
+    Bm = xbc_c[..., d_inner: d_inner + spec.d_state]
+    Cm = xbc_c[..., d_inner + spec.d_state:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])                # (H,)
+    dA = jnp.exp(dtv * a)                        # (B,H)
+    xh = xs.reshape(b, n_heads, spec.head_dim).astype(jnp.float32)
+
+    st = cache["ssm_state"]                      # (B,H,P,N)
+    st = st * dA[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), st)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = _gated_norm(params["norm"], y, z, cfg.norm_eps)
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    return out[:, None, :], {"ssm_state": st, "conv_state": new_conv_state}

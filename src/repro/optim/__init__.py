@@ -1,0 +1,8 @@
+from repro.optim.sgd import (  # noqa: F401
+    SGDConfig,
+    apply_updates,
+    init_sgd,
+    masked_sgd_step,
+    sgd_step,
+)
+from repro.optim.schedules import exp_decay, cosine_schedule  # noqa: F401

@@ -1,0 +1,7 @@
+from repro.sharding.ctx import (  # noqa: F401
+    axis_rules,
+    constrain,
+    current_mesh,
+    logical_sharding,
+    use_mesh_rules,
+)

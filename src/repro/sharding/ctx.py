@@ -1,0 +1,105 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("client", "batch", "seq", "embed"))``).  A context manager
+installs a mesh + logical->mesh rules; outside any context the annotations
+are no-ops, so the same model code runs in the CPU simulator and in the
+multi-pod dry-run unchanged.
+
+Default rules (see DESIGN.md §5):
+  client -> ('pod','data')   stacked personalized models
+  batch  -> 'data' (only when there is no client axis)
+  expert -> 'model'
+  heads/kv_heads/ffn/vocab -> 'model'
+  kv_seq -> 'data' for long-context decode (context parallelism)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def axis_rules(mesh: Mesh, overrides: dict | None = None) -> dict:
+    names = set(mesh.axis_names)
+    has_pod = "pod" in names
+    client = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        "client": client,
+        "batch": (),                 # per-client batch: sharded via inputs
+        "batch_noshard": (),
+        "seq": (),
+        "kv_seq": (),                # ('data',) override for long-context K=1
+        "embed": (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "ffn": ("model",),
+        "expert": ("model",),
+        "expert_cap": (),
+        "vocab": ("model",),
+        "conv": (),
+        "fsdp": ("data",),           # 2-D weight sharding for K=1 giants
+        "state": (),
+        None: (),
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _spec_for(names: Sequence[Optional[str]], rules: dict) -> P:
+    parts = []
+    for n in names:
+        mapped = rules.get(n, ())
+        if not mapped:
+            parts.append(None)
+        elif len(mapped) == 1:
+            parts.append(mapped[0])
+        else:
+            parts.append(tuple(mapped))
+    return P(*parts)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, overrides: dict | None = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", None)
+    _state.mesh = mesh
+    _state.rules = axis_rules(mesh, overrides)
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context."""
+    rules = _rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"rank mismatch: {x.shape} vs {names}")
+    spec = _spec_for(names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logical_sharding(mesh: Mesh, names: Sequence[Optional[str]],
+                     overrides: dict | None = None) -> NamedSharding:
+    """NamedSharding for input/output shardings outside a context."""
+    return NamedSharding(mesh, _spec_for(names, axis_rules(mesh, overrides)))

@@ -1,0 +1,163 @@
+"""Parameter / cache / batch sharding rules for the production meshes.
+
+Layout summary (DESIGN.md §5):
+
+* Stacked-client dim (K>1): sharded over ('pod','data') / ('data',).
+* Tensor-parallel 'model' axis on: qkv out dim, o-proj in dim, ffn hidden,
+  vocab, expert dim, ssm inner projections, cache head_dim.
+* K==1 giants (jamba) additionally shard the non-'model' matrix dim over
+  'data' (2-D FSDP+TP); the client dim (size 1, or 'pod' on the 2-pod mesh)
+  still leads every leaf so the step function is uniform across archs.
+* KV caches shard head_dim over 'model' (always divisible: 64/128/256);
+  long-context K==1 decode additionally shards cache seq over 'data'
+  (context parallelism).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path
+
+PyTree = Any
+
+# path fragments whose 2-D matrices are (sharded_in, out) rather than
+# (in, sharded_out)
+_ROW_SHARDED = ("wo/w", "w_down", "out_proj", "head/w")
+_REPLICATED = ("norm", "gn", "A_log", "/D", "dt_bias", "enc_pos", "router",
+               "conv_b")
+
+
+def _is_replicated(path: str) -> bool:
+    return any(k in path for k in _REPLICATED) or path.endswith("/b")
+
+
+def _client_axes(mesh: Mesh, fsdp2d: bool = False,
+                 k: Optional[int] = None) -> Optional[tuple]:
+    """Mesh axes carrying the stacked client dim.  FSDP2D archs put clients
+    on 'pod' only ('data' is the FSDP axis); on a single-pod mesh their
+    client dim has size 1 and stays unsharded.  When ``k`` (the actual
+    leading-dim size) is given, the axes are trimmed until they divide it
+    (K=1 long-context decode on the multi-pod mesh stays unsharded)."""
+    if fsdp2d:
+        axes = ("pod",) if "pod" in mesh.axis_names else None
+    else:
+        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if axes is None or k is None:
+        return axes
+    while axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if k >= size and k % size == 0:
+            return axes
+        axes = axes[:-1]
+    return None
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0 and dim >= mesh.shape[axis]
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, fsdp2d: bool,
+               stacked: bool = True) -> P:
+    """PartitionSpec for one (client-stacked) parameter leaf."""
+    client = _client_axes(mesh, fsdp2d, shape[0] if stacked else None)
+    body = shape[1:] if stacked else shape
+    lead = [client if stacked else None]
+    fsdp = "data" if fsdp2d else None
+
+    def dims() -> list:
+        d = len(body)
+        # vectors / norms / biases / routers / conv params stay replicated
+        if _is_replicated(path) or d <= 1:
+            return [None] * d
+        # stacked scan-block leaves have a leading n_blocks dim
+        if "/moe/" in path and "shared" not in path and d >= 3:
+            # (blocks?, E, d1, d2): expert dim over model, d1 over fsdp
+            pre = [None] * (d - 3)
+            e_ok = _fits(body[d - 3], mesh, "model")
+            return pre + ["model" if e_ok else None,
+                          fsdp if fsdp and _fits(body[d - 2], mesh, "data") else None,
+                          None]
+        if "embed/table" in path:
+            return [("model" if _fits(body[0], mesh, "model") else None),
+                    (fsdp if fsdp and _fits(body[1], mesh, "data") else None)]
+        pre = [None] * (d - 2)
+        r, c = body[-2], body[-1]
+        if any(k in path for k in _ROW_SHARDED):
+            return pre + [("model" if _fits(r, mesh, "model") else None),
+                          (fsdp if fsdp and _fits(c, mesh, "data") else None)]
+        if "conv_w" in path:
+            return pre + [None, ("model" if _fits(c, mesh, "model") else None)]
+        return pre + [(fsdp if fsdp and _fits(r, mesh, "data") else None),
+                      ("model" if _fits(c, mesh, "model") else None)]
+
+    spec = (lead + dims()) if stacked else dims()
+    return P(*spec)
+
+
+def cache_spec(path: str, shape: tuple, mesh: Mesh, seq_data: bool,
+               stacked: bool = True, fsdp2d: bool = False) -> P:
+    """KV/SSM cache leaves.  shape (K, [blocks,] B, S, h, dh) for kv,
+    (K, [blocks,] B, H, Pd, N) for ssm_state, (K, [blocks,] B, W, C) conv."""
+    client = _client_axes(mesh, fsdp2d, shape[0] if stacked else None)
+    body = list(shape[1:] if stacked else shape)
+    d = len(body)
+    lead = [client if stacked else None]
+
+    def dims() -> list:
+        if path.endswith("/k") or path.endswith("/v"):
+            pre = [None] * (d - 4)
+            seq = "data" if seq_data else None
+            dh = "model" if _fits(body[-1], mesh, "model") else None
+            return pre + [None, seq, None, dh]
+        if "ssm_state" in path:
+            pre = [None] * (d - 4)
+            h = "model" if _fits(body[-3], mesh, "model") else None
+            return pre + [None, h, None, None]
+        if "conv_state" in path:
+            pre = [None] * (d - 3)
+            c = "model" if _fits(body[-1], mesh, "model") else None
+            return pre + [None, None, c]
+        return [None] * d
+
+    spec = (lead + dims()) if stacked else dims()
+    return P(*spec)
+
+
+def batch_spec(path: str, shape: tuple, mesh: Mesh, fsdp2d: bool = False) -> P:
+    """Stacked input leaves (K, B, ...): client dim over its axes; for
+    FSDP2D archs the per-client batch dim rides 'data' when divisible."""
+    client = _client_axes(mesh, fsdp2d, shape[0])
+    rest = [None] * (len(shape) - 1)
+    if fsdp2d and len(shape) >= 2 and shape[1] % mesh.shape["data"] == 0 \
+            and shape[1] >= mesh.shape["data"]:
+        rest[0] = "data"
+    return P(*([client] + rest))
+
+
+def tree_param_shardings(tree: PyTree, mesh: Mesh, fsdp2d: bool,
+                         stacked: bool = True) -> PyTree:
+    return tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, tuple(x.shape), mesh,
+                                                    fsdp2d, stacked)), tree)
+
+
+def tree_cache_shardings(tree: PyTree, mesh: Mesh, seq_data: bool,
+                         stacked: bool = True, fsdp2d: bool = False) -> PyTree:
+    return tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, cache_spec(p, tuple(x.shape), mesh,
+                                                    seq_data, stacked, fsdp2d)),
+        tree)
+
+
+def tree_batch_shardings(tree: PyTree, mesh: Mesh, fsdp2d: bool = False) -> PyTree:
+    return tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh,
+            batch_spec(p, tuple(x.shape), mesh, fsdp2d)
+            if len(x.shape) > 0 else P()),
+        tree)

@@ -1,0 +1,102 @@
+"""HLO text analysis: collective-bytes extraction for the roofline.
+
+``compiled.cost_analysis()`` has no collective accounting, so we parse the
+post-SPMD HLO (per-device program) and sum the bytes each collective moves.
+Shapes in the partitioned module are per-device shard shapes.
+
+Per-op byte conventions (ring algorithms, bytes per device):
+  all-gather        : output bytes (each device receives ~full output)
+  all-reduce        : 2 x input bytes (reduce-scatter + all-gather phases)
+  reduce-scatter    : input bytes
+  all-to-all        : input bytes
+  collective-permute: input bytes (one neighbor send/recv)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-gather": ("out", 1.0),
+    "all-reduce": ("in", 2.0),
+    "reduce-scatter": ("in", 1.0),
+    "all-to-all": ("in", 1.0),
+    "collective-permute": ("in", 1.0),
+    "ragged-all-to-all": ("in", 1.0),
+}
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(?:-start|-done)?\((.*?)\)",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def row(self) -> dict:
+        return {
+            "total_GB": round(self.total_bytes / 1e9, 4),
+            **{k: round(v / 1e9, 4) for k, v in sorted(self.bytes_by_kind.items())},
+            "counts": dict(sorted(self.count_by_kind.items())),
+        }
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic of a partitioned HLO module.
+
+    ``*-start`` ops are counted; their ``*-done`` halves are skipped to avoid
+    double counting.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_part, kind, in_part = m.groups()
+        side, factor = _COLLECTIVES[kind]
+        nbytes = _shape_bytes(out_part if side == "out" else in_part) * factor
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> dict[str, int]:
+    """Crude opcode histogram (useful for spotting remat recompute and
+    layout-change churn in §Perf)."""
+    counts: dict[str, int] = {}
+    rx = re.compile(r"=\s*[\w\[\]{},. ]*?\s([a-z][a-z0-9-]*)\(")
+    for line in hlo_text.splitlines():
+        m = rx.search(line)
+        if m:
+            op = m.group(1)
+            counts[op] = counts.get(op, 0) + 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

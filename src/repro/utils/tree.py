@@ -1,0 +1,129 @@
+"""Pytree utilities used across the framework.
+
+All model parameters, masks, gradients and optimizer states are plain nested
+dicts of jnp arrays.  These helpers provide path-aware maps, counting, and
+RNG splitting without any framework dependency.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def path_str(path) -> str:
+    """Render a jax.tree_util key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree, *rest: PyTree) -> PyTree:
+    """Like jax.tree.map but fn receives the string path as first arg."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x, *xs: fn(path_str(kp), x, *xs), tree, *rest
+    )
+
+
+def tree_leaves_with_path(tree: PyTree) -> list[tuple[str, Any]]:
+    return [(path_str(kp), leaf) for kp, leaf in jax.tree_util.tree_leaves_with_path(tree)]
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_nnz(tree: PyTree) -> int:
+    """Number of non-zero entries (for masks: active parameter count)."""
+    return int(sum(int(jnp.sum(x != 0)) for x in jax.tree.leaves(tree)))
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_ones_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.ones_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_mul(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.multiply, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    return sum(jnp.vdot(x, y) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def tree_l2(a: PyTree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a)))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_stack(trees: Iterable[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees along a new leading axis."""
+    trees = list(trees)
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_index(tree: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def split_like(key: jax.Array, tree: PyTree) -> PyTree:
+    """One PRNG key per leaf, same structure as `tree`."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def select_by_path(tree: PyTree, pattern: str) -> PyTree:
+    """Boolean pytree: True where path matches regex `pattern`."""
+    rx = re.compile(pattern)
+    return tree_map_with_path(lambda p, x: bool(rx.search(p)), tree)
+
+
+def count_params(tree: PyTree) -> dict[str, int]:
+    """Per-path parameter counts plus 'TOTAL'."""
+    out = {p: int(np.prod(x.shape)) for p, x in tree_leaves_with_path(tree)}
+    out["TOTAL"] = sum(out.values())
+    return out
+
+
+def check_finite(tree: PyTree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))

@@ -1,0 +1,9 @@
+# Tests run on the single real CPU device — the 512-device dry-run env var
+# is deliberately NOT set here (see launch/dryrun.py which sets it itself).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,62 @@
+"""Integration test of the full dry-run pipeline (lower + compile + roofline
+extraction) at smoke scale: reduced archs, tiny shapes, a 2x2(x2) host-device
+test mesh.  Runs in a subprocess because the forced device count must be set
+before jax initializes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(tmp_path, arch, shape, multi_pod=False, gossip="einsum"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+           "--arch", arch, "--shape", shape, "--out", str(tmp_path),
+           "--gossip", gossip]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    mesh = "testpod2x16x16" if multi_pod else "testpod16x16"
+    tag = f"{arch}__{shape}__{mesh}" + (f"__{gossip}" if gossip != "einsum" else "")
+    with open(os.path.join(tmp_path, tag + ".json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-8b", "train_4k"),
+    ("deepseek-moe-16b", "train_4k"),
+    ("mamba2-1.3b", "decode_32k"),
+])
+def test_smoke_dryrun_single_pod(tmp_path, arch, shape):
+    rec = _run_dryrun(tmp_path, arch, shape)
+    assert rec["status"] == "ok", rec
+    assert rec["cost"]["flops"] > 0
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_smoke_dryrun_multi_pod_has_cross_pod_collectives(tmp_path):
+    rec = _run_dryrun(tmp_path, "gemma3-1b", "train_4k", multi_pod=True)
+    assert rec["status"] == "ok", rec
+    # the gossip einsum over the ('pod','data') client axes must show up
+    assert rec["coll_bytes_per_device"] > 0
+    kinds = rec["collectives"]["counts"]
+    assert any(k in kinds for k in
+               ("all-gather", "all-reduce", "collective-permute", "all-to-all"))
+
+
+@pytest.mark.slow
+def test_smoke_dryrun_ring_gossip_uses_permute(tmp_path):
+    rec = _run_dryrun(tmp_path, "gemma3-1b", "train_4k", gossip="ppermute")
+    assert rec["status"] == "ok", rec
+    assert rec["collectives"]["counts"].get("collective-permute", 0) > 0

@@ -1,0 +1,70 @@
+"""Mask search (Alg. 2): budget preservation, prune/regrow selection,
+cosine annealing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.evolve import (
+    cosine_prune_rate,
+    evolve_mask_layer,
+    evolve_masks,
+    layer_nnz_budgets,
+)
+from repro.core.masks import erk_densities_for_params, init_mask, apply_mask
+
+
+def test_cosine_annealing_endpoints():
+    assert cosine_prune_rate(0.5, 0, 100) == pytest.approx(0.5)
+    assert cosine_prune_rate(0.5, 100, 100) == pytest.approx(0.0, abs=1e-9)
+    assert cosine_prune_rate(0.5, 50, 100) == pytest.approx(0.25)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(32, 400), rate=st.floats(0.0, 0.9), seed=st.integers(0, 50))
+def test_nnz_budget_preserved(n, rate, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n,))
+    m = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (n,)) < 0.5).astype(jnp.float32)
+    n_active = int(jnp.sum(m))
+    w = w * m
+    g = jax.random.normal(jax.random.PRNGKey(seed + 2), (n,))
+    nm, nw = evolve_mask_layer(w, m, g, rate, n_active)
+    assert int(jnp.sum(nm)) == n_active
+    # pruned coordinates have zero weight
+    assert bool(jnp.all(jnp.where(nm == 0, nw == 0, True)))
+
+
+def test_prunes_smallest_and_grows_largest():
+    w = jnp.array([0.01, 5.0, 0.02, 4.0, 0.0, 0.0])
+    m = jnp.array([1.0, 1.0, 1.0, 1.0, 0.0, 0.0])
+    g = jnp.array([0.0, 0.0, 0.0, 0.0, 9.0, 0.1])
+    nm, nw = evolve_mask_layer(w, m, g, 0.5, 4)  # prune 2, regrow 2
+    np.testing.assert_array_equal(np.asarray(nm), [0, 1, 0, 1, 1, 1])
+    # regrown enter at zero (warm-started by next gossip)
+    assert float(nw[4]) == 0.0
+
+
+def test_evolve_masks_tree_only_touches_sparsifiable():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (32, 32)), "b": jnp.ones((32,))}
+    densities = erk_densities_for_params(params, 0.5)
+    mask = init_mask(key, params, 0.5)
+    params = apply_mask(params, mask)
+    budgets = layer_nnz_budgets(params, densities)
+    g = {"w": jax.random.normal(key, (32, 32)), "b": jnp.zeros((32,))}
+    nm, npar = evolve_masks(params, mask, g, 0.3, budgets)
+    assert bool(jnp.all(nm["b"] == 1))
+    np.testing.assert_array_equal(np.asarray(npar["b"]), np.ones(32))
+    assert int(jnp.sum(nm["w"])) == budgets["w"]
+
+
+def test_zero_rate_is_identity():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64,))
+    m = (jax.random.uniform(key, (64,)) < 0.4).astype(jnp.float32)
+    w = w * m + m * 1e-3  # ensure no zero-valued active weights
+    g = jax.random.normal(jax.random.PRNGKey(5), (64,))
+    nm, nw = evolve_mask_layer(w, m, g, 0.0, int(jnp.sum(m)))
+    np.testing.assert_array_equal(np.asarray(nm), np.asarray(m))

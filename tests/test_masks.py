@@ -1,0 +1,89 @@
+"""ERK mask initialization: densities, budgets, personalization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masks import (
+    apply_mask,
+    erk_densities_for_params,
+    erk_layer_densities,
+    init_client_masks,
+    init_mask,
+    mask_density,
+)
+
+
+def _params(key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    return {
+        "a": {"w": jax.random.normal(ks[0], (64, 128)), "b": jnp.zeros((128,))},
+        "c": {"w": jax.random.normal(ks[1], (512, 256))},
+        "d": {"w": jax.random.normal(ks[2], (8, 8))},
+    }
+
+
+def test_erk_total_density_hits_target():
+    shapes = {"a": (64, 128), "b": (512, 256), "c": (8, 8)}
+    for target in (0.1, 0.3, 0.5, 0.8):
+        dens = erk_layer_densities(shapes, target)
+        total = sum(np.prod(s) for s in shapes.values())
+        nnz = sum(dens[k] * np.prod(s) for k, s in shapes.items())
+        assert abs(nnz / total - target) < 1e-6
+
+
+def test_erk_small_layers_denser():
+    shapes = {"small": (8, 8), "big": (1024, 1024)}
+    dens = erk_layer_densities(shapes, 0.3)
+    assert dens["small"] > dens["big"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=st.lists(st.tuples(st.integers(4, 200), st.integers(4, 200)),
+                  min_size=1, max_size=6),
+    density=st.floats(0.05, 1.0),
+)
+def test_erk_property_density_and_clipping(dims, density):
+    shapes = {f"l{i}": d for i, d in enumerate(dims)}
+    dens = erk_layer_densities(shapes, density)
+    assert all(0.0 <= v <= 1.0 for v in dens.values())
+    total = sum(np.prod(s) for s in shapes.values())
+    nnz = sum(dens[k] * np.prod(s) for k, s in shapes.items())
+    # exact unless everything saturates at 1
+    if any(v < 1.0 for v in dens.values()):
+        assert nnz / total == pytest.approx(density, abs=1e-6)
+    else:
+        assert density >= nnz / total - 1e-6
+
+
+def test_init_mask_density_and_dense_leaves():
+    params = _params()
+    mask = init_mask(jax.random.PRNGKey(1), params, 0.5)
+    d = mask_density(mask, params)
+    assert abs(d - 0.5) < 0.05
+    # bias leaf stays fully dense
+    assert bool(jnp.all(mask["a"]["b"] == 1))
+
+
+def test_client_masks_personalized():
+    params = _params()
+    masks = init_client_masks(jax.random.PRNGKey(0), params, [0.5, 0.5, 0.2])
+    assert mask_density(masks[2], params) < mask_density(masks[0], params)
+    # two same-capacity clients still draw different masks
+    diff = jnp.sum(masks[0]["c"]["w"] != masks[1]["c"]["w"])
+    assert diff > 0
+
+
+def test_apply_mask_zeroes():
+    params = _params()
+    mask = init_mask(jax.random.PRNGKey(1), params, 0.3)
+    sparse = apply_mask(params, mask)
+    assert bool(jnp.all(jnp.where(mask["c"]["w"] == 0,
+                                  sparse["c"]["w"] == 0, True)))
+
+
+def test_erk_rejects_bad_density():
+    with pytest.raises(ValueError):
+        erk_layer_densities({"a": (4, 4)}, 0.0)

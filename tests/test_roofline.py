@@ -1,0 +1,65 @@
+"""Roofline math + HLO parsing unit tests (no devices needed)."""
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    active_params,
+    build_report,
+    model_flops,
+    total_params,
+)
+
+
+def test_total_params_match_assignments():
+    # sanity vs the public parameter counts (loose: our defs are faithful
+    # but tokenizer/tying details shift a few percent)
+    expect = {
+        "qwen3-8b": (7.0e9, 9.5e9),
+        "starcoder2-7b": (6.5e9, 8.5e9),
+        "llava-next-mistral-7b": (6.5e9, 8.0e9),
+        "deepseek-moe-16b": (14e9, 19e9),
+        "qwen3-moe-30b-a3b": (27e9, 33e9),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+        "gemma-2b": (2.0e9, 3.0e9),
+        "gemma3-1b": (0.9e9, 1.4e9),
+        "jamba-1.5-large-398b": (350e9, 440e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = total_params(ARCHS[name])
+        assert lo <= n <= hi, f"{name}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_below_total():
+    for name in ("deepseek-moe-16b", "qwen3-moe-30b-a3b", "jamba-1.5-large-398b"):
+        cfg = ARCHS[name]
+        assert active_params(cfg) < 0.5 * total_params(cfg), name
+
+
+def test_qwen3_moe_active_about_3b():
+    n = active_params(ARCHS["qwen3-moe-30b-a3b"])
+    assert 2.0e9 < n < 4.5e9, n / 1e9
+
+
+def test_model_flops_modes():
+    cfg = ARCHS["qwen3-8b"]
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * active_params(cfg) * 256 * 4096)
+    assert pf == pytest.approx(2 * active_params(cfg) * 32 * 32768)
+    assert dc == pytest.approx(2 * active_params(cfg) * 128)
+
+
+def test_build_report_terms_and_bottleneck():
+    cfg = ARCHS["qwen3-8b"]
+    shape = INPUT_SHAPES["train_4k"]
+    cost = {"flops": 1e13, "bytes accessed": 1e12}
+    rep = build_report(cfg, shape, "pod16x16", 256, cost, 5e10)
+    assert rep.compute_s == pytest.approx(1e13 / PEAK_FLOPS)
+    assert rep.memory_s == pytest.approx(1e12 / HBM_BW)
+    assert rep.collective_s == pytest.approx(5e10 / ICI_BW)
+    assert rep.bottleneck == "memory"
+    assert 0 < rep.mfu <= 1.5

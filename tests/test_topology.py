@@ -1,0 +1,67 @@
+"""Topology properties: degrees, self-loops, busiest-node bound, dropping."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    busiest_node_degree,
+    fully_connected,
+    make_adjacency,
+    mixing_matrix,
+    ring,
+    time_varying_random,
+)
+from repro.fl.decentralized import metropolis_weights
+
+
+def test_ring_degrees():
+    a = ring(8)
+    assert np.all(np.diag(a) == 1)
+    assert busiest_node_degree(a) == 2
+    assert np.all(a.sum(1) == 3)
+
+
+def test_fc():
+    a = fully_connected(5)
+    assert busiest_node_degree(a) == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 40), deg=st.integers(1, 12), r=st.integers(0, 5))
+def test_random_topology_degree_bounds(n, deg, r):
+    a = time_varying_random(n, deg, r, seed=1)
+    assert np.all(np.diag(a) == 1)
+    in_deg = a.sum(1) - 1
+    out_deg = a.sum(0) - 1
+    if deg < n:
+        # the busiest-node constraint bounds BOTH directions (paper §4.1)
+        assert np.all(in_deg <= deg) and np.all(out_deg <= deg)
+        assert np.all(in_deg >= 1)
+        assert busiest_node_degree(a) <= deg
+
+
+def test_time_varying_changes_by_round():
+    a0 = time_varying_random(20, 5, 0, seed=3)
+    a1 = time_varying_random(20, 5, 1, seed=3)
+    assert not np.array_equal(a0, a1)
+
+
+def test_drop_prob_isolates():
+    a = time_varying_random(30, 5, 0, seed=0, drop_prob=0.9)
+    dropped = [k for k in range(30)
+               if a[k].sum() == 1 and a[:, k].sum() == 1]
+    assert len(dropped) > 10
+
+
+def test_mixing_row_stochastic():
+    a = make_adjacency("random", 12, 3, degree=4)
+    w = mixing_matrix(a)
+    assert np.allclose(w.sum(1), 1.0)
+
+
+def test_metropolis_doubly_stochastic():
+    a = make_adjacency("random", 10, 1, degree=3)
+    w = metropolis_weights(a)
+    assert np.allclose(w.sum(0), 1.0, atol=1e-9)
+    assert np.allclose(w.sum(1), 1.0, atol=1e-9)
+    assert np.allclose(w, w.T)
+    assert np.all(w >= -1e-12)
