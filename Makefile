@@ -1,0 +1,21 @@
+# Repo verification entry points (see ROADMAP.md "Tier-1 verify").
+#
+#   make verify   - full test suite + a smoke run of the training launcher
+#   make tier1    - only the tier1-marked fast core tests
+#   make test     - full test suite
+
+PY := PYTHONPATH=src python
+
+.PHONY: verify test tier1 smoke
+
+verify: test smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+tier1:
+	$(PY) -m pytest -x -q -m tier1
+
+smoke:
+	$(PY) -m repro.launch.train simulate --strategy dispfl --rounds 2 \
+	    --clients 4 --local-epochs 1 --samples-per-class 20 --eval-every 2

@@ -1,0 +1,99 @@
+"""Adding a strategy to the zoo in <100 lines: DFedProx.
+
+A decentralized FedProx variant — Metropolis gossip mixing (as D-PSGD) but
+each client's local phase adds a proximal pull toward the model it received
+from its neighborhood, damping client drift under non-IID data.  Only three
+hooks differ from the defaults; topology sampling, eval cadence, streaming
+metrics, checkpointing and comm/FLOP accounting all come from RoundEngine.
+
+    PYTHONPATH=src python examples/custom_strategy.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.accounting import decentralized_comm, sparse_training_flops
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, RoundEngine, make_cnn_task, make_strategy, register
+from repro.fl.decentralized import metropolis_weights
+from repro.fl.engine import StrategyBase
+from repro.utils.tree import tree_size
+
+
+@register("dfedprox")
+class DFedProx(StrategyBase):
+    """State: {"params": [K trees]}.  mu is the proximal strength."""
+
+    def __init__(self, mu: float = 0.1):
+        self.mu = mu
+
+    def init_state(self, task, clients, cfg):
+        super().init_state(task, clients, cfg)
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
+        params = [task.init_fn(k) for k in keys]
+        self.n_coords = tree_size(params[0])
+        return {"params": params}
+
+    def mix(self, state, ctx):
+        w = metropolis_weights(ctx.adjacency)
+        params = state["params"]
+        state["params"] = [
+            jax.tree.map(
+                lambda *leaves: sum(w[k, j] * x for j, x in enumerate(leaves)
+                                    if w[k, j] != 0.0),
+                *params)
+            for k in range(len(params))
+        ]
+
+    def local_update(self, state, k, ctx):
+        c, cfg = self.clients[k], ctx.cfg
+        rng = ctx.client_rng(k)
+        ref = state["params"][k]                       # neighborhood model
+        w = ref
+        bs = min(cfg.batch_size, c.n_train)
+        for _ in range(cfg.local_epochs):
+            order = rng.permutation(c.n_train)
+            for i in range(0, len(order), bs):
+                s = order[i: i + bs]
+                _, g = self.task.value_and_grad(w, c.train_x[s], c.train_y[s])
+                w = jax.tree.map(
+                    lambda wi, gi, ri: wi - ctx.lr * (
+                        gi + cfg.weight_decay * wi + self.mu * (wi - ri)),
+                    w, g, ref)
+        state["params"][k] = w
+
+    def round_comm(self, state, ctx):
+        return decentralized_comm(ctx.adjacency,
+                                  [self.n_coords] * len(self.clients),
+                                  self.n_coords)
+
+    def round_flops(self, state, ctx):
+        return sparse_training_flops(
+            self.task.fwd_flops, {k: 1.0 for k in self.task.fwd_flops},
+            self.n_samples, ctx.cfg.local_epochs, mask_search_batches=0,
+            batch_size=ctx.cfg.batch_size)
+
+
+def main() -> None:
+    clients, _ = build_federated_image_task(
+        seed=0, n_clients=8, partition="pathological", classes_per_client=2,
+        n_train_per_class=60, n_test_per_client=30, hw=16, noise=0.8)
+    task = make_cnn_task("smallcnn", n_classes=10, hw=16, width=8)
+    cfg = FLConfig(n_clients=8, rounds=6, local_epochs=2, batch_size=32,
+                   degree=3, eval_every=2)
+    engine = RoundEngine(make_strategy("dfedprox", mu=0.1), task, clients, cfg)
+    for m in engine.rounds():                          # streaming metrics
+        acc = (f"acc={m.acc_mean:.3f}±{m.acc_std:.3f}"
+               if m.acc_mean is not None else "")
+        print(f"round {m.round + 1}/{cfg.rounds} lr={m.lr:.3f} "
+              f"comm={m.comm_busiest_mb:.2f}MB {acc}")
+    res = engine.result()
+    print(f"final personalized acc: {res.final_acc:.3f} "
+          f"(per-client std {np.std(res.final_accs):.3f})")
+
+
+if __name__ == "__main__":
+    main()

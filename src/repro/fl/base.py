@@ -7,6 +7,11 @@ per-layer analytic FLOPs map used by the accounting.
 ``local_sgd`` runs the paper's local phase: E epochs of minibatch SGD with
 fixed batch size (epochs are padded to whole batches so a single jitted step
 serves all clients), optional DisPFL-style gradient masking.
+
+Determinism: callers must pass a *per-client, per-round* generator (see
+``repro.fl.engine.derive_rng``) — never one generator shared across clients,
+which would make results depend on client iteration order and break the
+engine's vmap/parallel execution paths.
 """
 from __future__ import annotations
 
@@ -155,6 +160,30 @@ def local_sgd(
             else:
                 params, state = sgd_step(params, grads, state, opt, lr)
     return params
+
+
+def finetune_clients(
+    task: Task,
+    params: list[PyTree],
+    clients,
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    opt: SGDConfig,
+    rng_for: Callable[[int], np.random.Generator],
+    mask=None,
+) -> list[PyTree]:
+    """Fine-tune every client from ``params[k]`` (the -FT eval variants).
+
+    ``rng_for(k)`` supplies the per-client generator; ``mask`` may be a
+    single shared mask tree, a per-client list, or None.
+    """
+    out = []
+    for k, c in enumerate(clients):
+        m = mask[k] if isinstance(mask, list) else mask
+        out.append(local_sgd(task, params[k], c.train_x, c.train_y, epochs,
+                             batch_size, lr, opt, rng_for(k), mask=m))
+    return out
 
 
 def evaluate_clients(task: Task, client_params: list[PyTree], clients) -> list[float]:

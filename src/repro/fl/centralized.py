@@ -1,8 +1,10 @@
-"""Centralized baselines (paper §4.1 / App. B.4): Local, FedAvg, FedAvg-FT,
-Ditto, FOMO, SubFedAvg.
+"""Centralized baselines (paper §4.1 / App. B.4) as engine hooks: Local,
+FedAvg, FedAvg-FT, Ditto, FOMO, SubFedAvg.
 
 All share the busiest-node constraint: the server touches at most
 ``cfg.degree`` clients per round (matching the decentralized degree bound).
+Client selection draws from the round-level rng stream, so it is
+reproducible under resume and independent of client iteration order.
 """
 from __future__ import annotations
 
@@ -10,26 +12,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.accounting import centralized_comm, decentralized_comm, sparse_training_flops
-from repro.core.evolve import evolve_mask_layer
+from repro.core.accounting import centralized_comm, sparse_training_flops
 from repro.core.gossip import gossip_average_one
-from repro.core.masks import apply_mask, default_sparsifiable, erk_densities_for_params
+from repro.core.masks import default_sparsifiable
 from repro.fl.base import (
     FLConfig,
     FLResult,
     Task,
-    evaluate_clients,
+    finetune_clients,
     local_sgd,
-    rounds_to_targets,
 )
-from repro.fl.decentralized import _finetune_all
-from repro.optim import SGDConfig, init_sgd, sgd_step
-from repro.utils.tree import (
-    tree_leaves_with_path,
-    tree_map_with_path,
-    tree_nnz,
-    tree_size,
+from repro.fl.engine import (
+    STREAM_EVAL,
+    RoundCtx,
+    StrategyBase,
+    derive_rng,
+    register,
+    run_strategy,
 )
+from repro.utils.tree import tree_map_with_path, tree_nnz, tree_size
 
 
 def _mean_trees(trees, weights=None):
@@ -42,18 +43,10 @@ def _mean_trees(trees, weights=None):
     return acc
 
 
-def _result(task, clients, cfg, history, final, comm, densities=None,
-            mask_batches=0, targets=(0.5,)):
-    n_samples = int(np.mean([c.n_train for c in clients]))
-    flops = sparse_training_flops(
-        task.fwd_flops, densities or {k: 1.0 for k in task.fwd_flops},
-        n_samples, cfg.local_epochs, mask_search_batches=mask_batches,
-        batch_size=cfg.batch_size)
-    return FLResult(
-        acc_history=history, final_accs=final,
-        comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
-        flops_per_round=flops.per_round_flops, flops_rows=flops.row(),
-        rounds_to=rounds_to_targets(history, list(targets)))
+def _dense_flops(task: Task, n_samples: int, cfg: FLConfig):
+    return sparse_training_flops(
+        task.fwd_flops, {k: 1.0 for k in task.fwd_flops}, n_samples,
+        cfg.local_epochs, mask_search_batches=0, batch_size=cfg.batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -61,24 +54,29 @@ def _result(task, clients, cfg, history, final, comm, densities=None,
 # ---------------------------------------------------------------------------
 
 
-def run_local(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
-    rng = np.random.default_rng(cfg.seed)
-    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    params = [task.init_fn(k) for k in keys]
-    history = []
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        params = [
-            local_sgd(task, params[k], c.train_x, c.train_y, cfg.local_epochs,
-                      cfg.batch_size, lr, opt, rng)
-            for k, c in enumerate(clients)
-        ]
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            history.append(float(np.mean(evaluate_clients(task, params, clients))))
-    final = evaluate_clients(task, params, clients)
-    comm = centralized_comm(0, [0], tree_size(params[0]))
-    return _result(task, clients, cfg, history, final, comm, targets=targets)
+@register("local")
+class LocalStrategy(StrategyBase):
+    vmap_capable = True
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
+        params = [task.init_fn(k) for k in keys]
+        self.n_coords = tree_size(params[0])
+        return {"params": params}
+
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["params"][k] = local_sgd(
+            self.task, state["params"][k], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k))
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        return centralized_comm(0, [0], self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        return _dense_flops(self.task, self.n_samples, ctx.cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -86,39 +84,81 @@ def run_local(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
 # ---------------------------------------------------------------------------
 
 
-def run_fedavg(task: Task, clients, cfg: FLConfig, finetune: bool = False,
-               targets=(0.5,)) -> FLResult:
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    w_global = task.init_fn(jax.random.PRNGKey(cfg.seed))
-    n_sel = min(cfg.degree, k_clients)
-    history = []
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        sel = rng.choice(k_clients, size=n_sel, replace=False)
-        locals_, sizes = [], []
-        for k in sel:
-            c = clients[k]
-            w = local_sgd(task, w_global, c.train_x, c.train_y,
-                          cfg.local_epochs, cfg.batch_size, lr, opt, rng)
-            locals_.append(w)
-            sizes.append(c.n_train)
+@register("fedavg", finetune=False)
+@register("fedavg_ft", finetune=True)
+class FedAvgStrategy(StrategyBase):
+    """State: ``{"w_global": tree}``.  Selected clients train from the
+    global model; ``post_round`` re-aggregates by sample counts."""
+
+    vmap_capable = True
+
+    def __init__(self, finetune: bool = False):
+        self.finetune = finetune
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
+        self.n_sel = min(cfg.degree, len(clients))
+        self.n_coords = tree_size(w0)
+        return {"w_global": w0}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        sel = ctx.round_rng().choice(len(self.clients), size=self.n_sel,
+                                     replace=False)
+        state["_sel"] = [int(k) for k in sel]
+        state["_locals"] = {}
+
+    def active_clients(self, state: dict, ctx: RoundCtx):
+        return state["_sel"]
+
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["_locals"][k] = local_sgd(
+            self.task, state["w_global"], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k))
+
+    # vmap adapters: every selected client starts from the global model
+    def local_params(self, state: dict, k: int):
+        return state["w_global"]
+
+    def set_local(self, state: dict, k: int, params) -> None:
+        state["_locals"][k] = params
+
+    def post_round(self, state: dict, ctx: RoundCtx) -> None:
+        sel = state.pop("_sel")
+        locals_ = state.pop("_locals")
+        sizes = [self.clients[k].n_train for k in sel]
         weights = [s / sum(sizes) for s in sizes]
-        w_global = _mean_trees(locals_, weights)
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            eval_params = [w_global] * k_clients
-            if finetune:
-                eval_params = _finetune_all(task, eval_params, clients, cfg, lr, rng)
-            history.append(float(np.mean(evaluate_clients(task, eval_params, clients))))
-    final_params = [w_global] * k_clients
-    if finetune:
-        final_params = _finetune_all(task, final_params, clients, cfg,
-                                     cfg.lr_at(cfg.rounds), rng)
-    final = evaluate_clients(task, final_params, clients)
-    n_coords = tree_size(w_global)
-    comm = centralized_comm(n_sel, [n_coords] * n_sel, n_coords)
-    return _result(task, clients, cfg, history, final, comm, targets=targets)
+        state["w_global"] = _mean_trees([locals_[k] for k in sel], weights)
+
+    def _broadcast(self, state: dict):
+        return [state["w_global"]] * len(self.clients)
+
+    def eval_params(self, state: dict, ctx: RoundCtx):
+        params = self._broadcast(state)
+        if not self.finetune:
+            return params
+        return finetune_clients(
+            self.task, params, self.clients, self.cfg.ft_epochs,
+            self.cfg.batch_size, ctx.lr, self.opt, ctx.eval_rng)
+
+    def finalize_eval_params(self, state: dict):
+        params = self._broadcast(state)
+        if not self.finetune:
+            return params
+        cfg = self.cfg
+        return finetune_clients(
+            self.task, params, self.clients, cfg.ft_epochs, cfg.batch_size,
+            cfg.lr_at(cfg.rounds), self.opt,
+            lambda k: derive_rng(cfg.seed, cfg.rounds, k, stream=STREAM_EVAL))
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        return centralized_comm(self.n_sel, [self.n_coords] * self.n_sel,
+                                self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        return _dense_flops(self.task, self.n_samples, ctx.cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -126,58 +166,83 @@ def run_fedavg(task: Task, clients, cfg: FLConfig, finetune: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def run_ditto(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
+@register("ditto")
+class DittoStrategy(StrategyBase):
     """Global FedAvg trajectory + per-client personal model with a proximal
     pull toward the global model (Li et al. 2021b).  Per the paper's fair
-    budget: 3 epochs on the global model, 2 on the personal one."""
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    keyring = jax.random.split(jax.random.PRNGKey(cfg.seed), k_clients + 1)
-    w_global = task.init_fn(keyring[0])
-    personal = [task.init_fn(keyring[k + 1]) for k in range(k_clients)]
-    n_sel = min(cfg.degree, k_clients)
-    g_epochs = max(1, (cfg.local_epochs * 3) // 5)
-    p_epochs = max(1, cfg.local_epochs - g_epochs)
-    history = []
+    budget: 3 epochs on the global model, 2 on the personal one.  The
+    interleaved prox loop keeps this on the per-client path (not vmap)."""
 
-    def prox_step(params, ref, x, y, lr):
-        loss, grads = task.value_and_grad(params, x, y)
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        k_clients = len(clients)
+        keyring = jax.random.split(jax.random.PRNGKey(cfg.seed), k_clients + 1)
+        w_global = task.init_fn(keyring[0])
+        personal = [task.init_fn(keyring[k + 1]) for k in range(k_clients)]
+        self.n_sel = min(cfg.degree, k_clients)
+        self.n_coords = tree_size(w_global)
+        self.g_epochs = max(1, (cfg.local_epochs * 3) // 5)
+        self.p_epochs = max(1, cfg.local_epochs - self.g_epochs)
+        return {"w_global": w_global, "personal": personal}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        sel = ctx.round_rng().choice(len(self.clients), size=self.n_sel,
+                                     replace=False)
+        state["_sel"] = [int(k) for k in sel]
+        state["_locals"] = {}
+
+    def active_clients(self, state: dict, ctx: RoundCtx):
+        return state["_sel"]
+
+    def _prox_step(self, params, ref, x, y, lr):
+        cfg = self.cfg
+        _, grads = self.task.value_and_grad(params, x, y)
         grads = jax.tree.map(
             lambda g, w, r: g + cfg.prox_lambda * (w - r), grads, params, ref)
         return jax.tree.map(lambda w, g: w - lr * (g + cfg.weight_decay * w),
                             params, grads)
 
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        sel = rng.choice(k_clients, size=n_sel, replace=False)
-        locals_, sizes = [], []
-        for k in sel:
-            c = clients[k]
-            w = local_sgd(task, w_global, c.train_x, c.train_y, g_epochs,
-                          cfg.batch_size, lr, opt, rng)
-            locals_.append(w)
-            sizes.append(c.n_train)
-            # personal model: prox-SGD toward the (old) global model
-            v = personal[k]
-            bs = min(cfg.batch_size, c.n_train)
-            for _ in range(p_epochs):
-                order = rng.permutation(c.n_train)
-                pad = (-len(order)) % bs
-                if pad:
-                    order = np.concatenate([order, order[:pad]])
-                for i in range(0, len(order), bs):
-                    s = order[i: i + bs]
-                    v = prox_step(v, w_global, c.train_x[s], c.train_y[s], lr)
-            personal[k] = v
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        cfg = ctx.cfg
+        rng = ctx.client_rng(k)
+        w_global = state["w_global"]
+        state["_locals"][k] = local_sgd(
+            self.task, w_global, c.train_x, c.train_y, self.g_epochs,
+            cfg.batch_size, ctx.lr, self.opt, rng)
+        # personal model: prox-SGD toward the (old) global model
+        v = state["personal"][k]
+        bs = min(cfg.batch_size, c.n_train)
+        for _ in range(self.p_epochs):
+            order = rng.permutation(c.n_train)
+            pad = (-len(order)) % bs
+            if pad:
+                order = np.concatenate([order, order[:pad]])
+            for i in range(0, len(order), bs):
+                s = order[i: i + bs]
+                v = self._prox_step(v, w_global, c.train_x[s], c.train_y[s],
+                                    ctx.lr)
+        state["personal"][k] = v
+
+    def post_round(self, state: dict, ctx: RoundCtx) -> None:
+        sel = state.pop("_sel")
+        locals_ = state.pop("_locals")
+        sizes = [self.clients[k].n_train for k in sel]
         weights = [s / sum(sizes) for s in sizes]
-        w_global = _mean_trees(locals_, weights)
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            history.append(float(np.mean(evaluate_clients(task, personal, clients))))
-    final = evaluate_clients(task, personal, clients)
-    n_coords = tree_size(w_global)
-    comm = centralized_comm(n_sel, [n_coords] * n_sel, n_coords)
-    return _result(task, clients, cfg, history, final, comm, targets=targets)
+        state["w_global"] = _mean_trees([locals_[k] for k in sel], weights)
+
+    def eval_params(self, state: dict, ctx: RoundCtx):
+        return state["personal"]
+
+    def finalize_eval_params(self, state: dict):
+        return state["personal"]
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        return centralized_comm(self.n_sel, [self.n_coords] * self.n_sel,
+                                self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        return _dense_flops(self.task, self.n_samples, ctx.cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -185,31 +250,38 @@ def run_ditto(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
 # ---------------------------------------------------------------------------
 
 
-def run_fomo(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
-    """First-order model optimization (Zhang et al. 2020): clients weight the
-    received models by the first-order utility
+@register("fomo")
+class FOMOStrategy(StrategyBase):
+    """First-order model optimization (Zhang et al. 2020): clients weight
+    the received models by the first-order utility
         u_j = max(L_k(w_k) - L_k(w_j), 0) / ||w_j - w_k||
     and move toward the useful ones before local training."""
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), k_clients)
-    params = [task.init_fn(k) for k in keys]
-    n_nbrs = min(cfg.degree, k_clients - 1)
-    history = []
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        new_params = []
+
+    vmap_capable = True
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
+        params = [task.init_fn(k) for k in keys]
+        self.n_nbrs = min(cfg.degree, len(clients) - 1)
+        self.n_coords = tree_size(params[0])
+        return {"params": params}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        params = state["params"]
+        k_clients = len(params)
+        mixed_all = []
         for k in range(k_clients):
-            c = clients[k]
-            xb, yb = c.sample_batch(rng, cfg.batch_size)
-            own_loss, _ = task.value_and_grad(params[k], xb, yb)
+            rng = ctx.client_rng(k)
+            c = self.clients[k]
+            xb, yb = c.sample_batch(rng, ctx.cfg.batch_size)
+            own_loss, _ = self.task.value_and_grad(params[k], xb, yb)
             nbrs = rng.choice([j for j in range(k_clients) if j != k],
-                              size=n_nbrs, replace=False)
+                              size=self.n_nbrs, replace=False)
             mixed = params[k]
             weights, deltas = [], []
             for j in nbrs:
-                lj, _ = task.value_and_grad(params[j], xb, yb)
+                lj, _ = self.task.value_and_grad(params[j], xb, yb)
                 delta = jax.tree.map(jnp.subtract, params[j], params[k])
                 norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(d))
                                           for d in jax.tree.leaves(delta)))) + 1e-8
@@ -219,18 +291,24 @@ def run_fomo(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
             tot = sum(weights)
             if tot > 0:
                 for u, d in zip(weights, deltas):
-                    mixed = jax.tree.map(lambda m, x: m + (u / tot) * x, mixed, d)
-            w = local_sgd(task, mixed, c.train_x, c.train_y, cfg.local_epochs,
-                          cfg.batch_size, lr, opt, rng)
-            new_params.append(w)
-        params = new_params
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            history.append(float(np.mean(evaluate_clients(task, params, clients))))
-    final = evaluate_clients(task, params, clients)
-    n_coords = tree_size(params[0])
-    comm = centralized_comm(min(cfg.degree, k_clients),
-                            [n_coords] * min(cfg.degree, k_clients), n_coords)
-    return _result(task, clients, cfg, history, final, comm, targets=targets)
+                    mixed = jax.tree.map(lambda m, x: m + (u / tot) * x,
+                                         mixed, d)
+            mixed_all.append(mixed)
+        state["params"] = mixed_all
+
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["params"][k] = local_sgd(
+            self.task, state["params"][k], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k))
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        n = self.n_nbrs
+        return centralized_comm(n, [self.n_coords] * n, self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        return _dense_flops(self.task, self.n_samples, ctx.cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -238,26 +316,34 @@ def run_fomo(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
 # ---------------------------------------------------------------------------
 
 
-def run_subfedavg(task: Task, clients, cfg: FLConfig, prune_per_round: float = 0.05,
-                  targets=(0.5,)) -> FLResult:
+@register("subfedavg")
+class SubFedAvgStrategy(StrategyBase):
     """Vahidian et al. 2021: clients start dense and iteratively magnitude-
     prune toward ``cfg.density`` as rounds progress; the server averages on
     the unpruned intersections (same intersection math as DisPFL's gossip,
     but star topology and dense-to-sparse)."""
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
-    params = [jax.tree.map(lambda x: x, w0) for _ in range(k_clients)]
-    masks = [jax.tree.map(lambda x: jnp.ones(x.shape, jnp.float32), w0)
-             for _ in range(k_clients)]
-    n_sel = min(cfg.degree, k_clients)
-    history = []
-    density_track = []
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        sel = list(rng.choice(k_clients, size=n_sel, replace=False))
-        # server-side intersection average for each selected client
+
+    vmap_capable = True
+
+    def __init__(self, prune_per_round: float = 0.05):
+        self.prune_per_round = prune_per_round
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        k_clients = len(clients)
+        w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
+        params = [jax.tree.map(lambda x: x, w0) for _ in range(k_clients)]
+        masks = [jax.tree.map(lambda x: jnp.ones(x.shape, jnp.float32), w0)
+                 for _ in range(k_clients)]
+        self.n_sel = min(cfg.degree, k_clients)
+        self.n_coords = tree_size(w0)
+        return {"params": params, "masks": masks}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        sel = [int(k) for k in ctx.round_rng().choice(
+            len(self.clients), size=self.n_sel, replace=False)]
+        state["_sel"] = sel
+        params, masks = state["params"], state["masks"]
         averaged = {}
         for k in sel:
             others = [j for j in sel if j != k]
@@ -265,27 +351,46 @@ def run_subfedavg(task: Task, clients, cfg: FLConfig, prune_per_round: float = 0
                 params[k], masks[k],
                 [params[j] for j in others], [masks[j] for j in others])
         for k in sel:
-            c = clients[k]
-            w = local_sgd(task, averaged[k], c.train_x, c.train_y,
-                          cfg.local_epochs, cfg.batch_size, lr, opt, rng,
-                          mask=masks[k])
-            # dense-to-sparse: magnitude-prune a further slice per round
-            cur_density = _tree_density(masks[k])
-            if cur_density > cfg.density:
-                masks[k], w = _magnitude_prune(w, masks[k], prune_per_round,
-                                               cfg.density)
-            params[k] = w
-        density_track.append(float(np.mean([_tree_density(m) for m in masks])))
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            history.append(float(np.mean(evaluate_clients(task, params, clients))))
-    final = evaluate_clients(task, params, clients)
-    n_coords = tree_size(w0)
-    nnz = [tree_nnz(m) for m in masks]
-    comm = centralized_comm(n_sel, sorted(nnz, reverse=True), n_coords)
-    mean_density = float(np.mean(density_track))
-    densities = {k: mean_density for k in task.fwd_flops}
-    return _result(task, clients, cfg, history, final, comm,
-                   densities=densities, targets=targets)
+            state["params"][k] = averaged[k]
+
+    def active_clients(self, state: dict, ctx: RoundCtx):
+        return state["_sel"]
+
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["params"][k] = local_sgd(
+            self.task, state["params"][k], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k), mask=state["masks"][k])
+
+    def local_mask(self, state: dict, k: int):
+        return state["masks"][k]
+
+    def evolve(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        # dense-to-sparse: magnitude-prune a further slice per round
+        if _tree_density(state["masks"][k]) > ctx.cfg.density:
+            state["masks"][k], state["params"][k] = _magnitude_prune(
+                state["params"][k], state["masks"][k], self.prune_per_round,
+                ctx.cfg.density)
+
+    def post_round(self, state: dict, ctx: RoundCtx) -> None:
+        state.pop("_sel")
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        # worst case: the server's n_sel connections carry the heaviest
+        # current models (centralized_comm truncates to n_sel)
+        nnz = sorted((tree_nnz(state["masks"][k]) for k in
+                      range(len(self.clients))), reverse=True)
+        return centralized_comm(self.n_sel, nnz, self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        mean_density = float(np.mean(
+            [_tree_density(m) for m in state["masks"]]))
+        densities = {k: mean_density for k in self.task.fwd_flops}
+        return sparse_training_flops(
+            self.task.fwd_flops, densities, self.n_samples,
+            ctx.cfg.local_epochs, mask_search_batches=0,
+            batch_size=ctx.cfg.batch_size)
 
 
 def _tree_density(mask) -> float:
@@ -315,3 +420,39 @@ def _magnitude_prune(params, mask, rate: float, floor: float):
     new_params = jax.tree.map(lambda t: t[1], paired,
                               is_leaf=lambda x: isinstance(x, tuple))
     return new_mask, new_params
+
+
+# ---------------------------------------------------------------------------
+# Back-compat wrappers (engine run -> FLResult)
+# ---------------------------------------------------------------------------
+
+
+def run_local(task: Task, clients, cfg: FLConfig, targets=(0.5,),
+              **engine_kw) -> FLResult:
+    return run_strategy("local", task, clients, cfg, targets=targets,
+                        **engine_kw)
+
+
+def run_fedavg(task: Task, clients, cfg: FLConfig, finetune: bool = False,
+               targets=(0.5,), **engine_kw) -> FLResult:
+    return run_strategy("fedavg", task, clients, cfg, targets=targets,
+                        finetune=finetune, **engine_kw)
+
+
+def run_ditto(task: Task, clients, cfg: FLConfig, targets=(0.5,),
+              **engine_kw) -> FLResult:
+    return run_strategy("ditto", task, clients, cfg, targets=targets,
+                        **engine_kw)
+
+
+def run_fomo(task: Task, clients, cfg: FLConfig, targets=(0.5,),
+             **engine_kw) -> FLResult:
+    return run_strategy("fomo", task, clients, cfg, targets=targets,
+                        **engine_kw)
+
+
+def run_subfedavg(task: Task, clients, cfg: FLConfig,
+                  prune_per_round: float = 0.05, targets=(0.5,),
+                  **engine_kw) -> FLResult:
+    return run_strategy("subfedavg", task, clients, cfg, targets=targets,
+                        prune_per_round=prune_per_round, **engine_kw)

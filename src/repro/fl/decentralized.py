@@ -1,5 +1,6 @@
 """Decentralized baselines: D-PSGD and D-PSGD-FT (Lian et al. 2017;
-FL-adapted with multi-epoch local phases per Sun et al. 2021).
+FL-adapted with multi-epoch local phases per Sun et al. 2021), as engine
+hooks.
 
 Gossip uses Metropolis-Hastings weights on the symmetrized topology (doubly
 stochastic), then each client runs E local epochs.  The -FT variant
@@ -12,66 +13,69 @@ dense model (same mask for all clients, as D-PSGD has no personalization).
 """
 from __future__ import annotations
 
-import copy
-
 import jax
 import numpy as np
 
 from repro.core.accounting import decentralized_comm, sparse_training_flops
 from repro.core.masks import apply_mask, erk_densities_for_params, init_mask
-from repro.core.topology import make_adjacency
-from repro.fl.base import (
-    FLConfig,
-    FLResult,
-    Task,
-    evaluate_clients,
-    local_sgd,
-    rounds_to_targets,
+from repro.fl.base import FLConfig, FLResult, Task, finetune_clients, local_sgd
+from repro.fl.engine import (
+    STREAM_EVAL,
+    RoundCtx,
+    StrategyBase,
+    derive_rng,
+    register,
+    run_strategy,
 )
-from repro.optim import SGDConfig
-from repro.utils.tree import tree_map_with_path, tree_nnz, tree_size
+from repro.utils.tree import tree_nnz, tree_size
 
 
 def metropolis_weights(a: np.ndarray) -> np.ndarray:
+    """Metropolis-Hastings mixing matrix of the symmetrized topology.
+
+    W[i,j] = 1/(1+max(deg_i, deg_j)) on edges, diagonal absorbs the rest;
+    doubly stochastic and symmetric.  Vectorized (the seed used an O(K^2)
+    Python double loop).
+    """
     sym = ((a + a.T) > 0).astype(float)
     np.fill_diagonal(sym, 0.0)
     deg = sym.sum(1)
-    k = len(a)
-    w = np.zeros_like(sym)
-    for i in range(k):
-        for j in range(k):
-            if sym[i, j] > 0:
-                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
-    for i in range(k):
-        w[i, i] = 1.0 - w[i].sum()
+    w = sym / (1.0 + np.maximum(deg[:, None], deg[None, :]))
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(1))
     return w
 
 
-def run_dpsgd(task: Task, clients, cfg: FLConfig, finetune: bool = False,
-              param_fraction: float = 1.0, targets=(0.5,)) -> FLResult:
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+@register("dpsgd", finetune=False)
+@register("dpsgd_ft", finetune=True)
+class DPSGDStrategy(StrategyBase):
+    """State: ``{"params": [K trees]}``.  The optional shared
+    ``param_fraction`` mask is static and re-derived on resume."""
 
-    w0 = task.init_fn(key)
-    mask = None
-    densities: dict[str, float] = {}
-    if param_fraction < 1.0:
-        densities = erk_densities_for_params(w0, param_fraction)
-        mask = init_mask(jax.random.PRNGKey(cfg.seed + 1), w0, param_fraction)
-        w0 = apply_mask(w0, mask)
-    params = [jax.tree.map(lambda x: x, w0) for _ in range(k_clients)]
+    vmap_capable = True
 
-    history: list[float] = []
-    adjacency0 = None
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        a = make_adjacency(cfg.topology, k_clients, t, cfg.degree, cfg.seed,
-                           cfg.drop_prob)
-        if adjacency0 is None:
-            adjacency0 = a
-        w_mix = metropolis_weights(a)
+    def __init__(self, finetune: bool = False, param_fraction: float = 1.0):
+        self.finetune = finetune
+        self.param_fraction = param_fraction
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
+        self.mask = None
+        self.densities: dict[str, float] = {}
+        if self.param_fraction < 1.0:
+            self.densities = erk_densities_for_params(w0, self.param_fraction)
+            self.mask = init_mask(jax.random.PRNGKey(cfg.seed + 1), w0,
+                                  self.param_fraction)
+            w0 = apply_mask(w0, self.mask)
+        self.n_coords = tree_size(w0)
+        params = [jax.tree.map(lambda x: x, w0) for _ in range(len(clients))]
+        return {"params": params}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        w_mix = metropolis_weights(ctx.adjacency)
+        params = state["params"]
+        k_clients = len(params)
         mixed = []
         for k in range(k_clients):
             acc = None
@@ -82,44 +86,53 @@ def run_dpsgd(task: Task, clients, cfg: FLConfig, finetune: bool = False,
                 acc = contrib if acc is None else jax.tree.map(
                     lambda u, v: u + v, acc, contrib)
             mixed.append(acc)
-        new_params = []
-        for k in range(k_clients):
-            c = clients[k]
-            w = local_sgd(task, mixed[k], c.train_x, c.train_y,
-                          cfg.local_epochs, cfg.batch_size, lr, opt, rng,
-                          mask=mask)
-            new_params.append(w)
-        params = new_params
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            eval_params = params
-            if finetune:
-                eval_params = _finetune_all(task, params, clients, cfg, lr, rng, mask)
-            history.append(float(np.mean(evaluate_clients(task, eval_params, clients))))
+        state["params"] = mixed
 
-    final_params = params
-    if finetune:
-        final_params = _finetune_all(task, params, clients, cfg,
-                                     cfg.lr_at(cfg.rounds), rng, mask)
-    n_coords = tree_size(params[0])
-    nnz = [tree_nnz(mask) if mask is not None else n_coords] * k_clients
-    comm = decentralized_comm(adjacency0, nnz, n_coords)
-    n_samples = int(np.mean([c.n_train for c in clients]))
-    flops = sparse_training_flops(task.fwd_flops, densities or {k: 1.0 for k in task.fwd_flops},
-                                  n_samples, cfg.local_epochs,
-                                  mask_search_batches=0, batch_size=cfg.batch_size)
-    final = evaluate_clients(task, final_params, clients)
-    return FLResult(
-        acc_history=history, final_accs=final,
-        comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
-        flops_per_round=flops.per_round_flops, flops_rows=flops.row(),
-        rounds_to=rounds_to_targets(history, list(targets)))
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["params"][k] = local_sgd(
+            self.task, state["params"][k], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k), mask=self.mask)
+
+    def local_mask(self, state: dict, k: int):
+        return self.mask
+
+    def eval_params(self, state: dict, ctx: RoundCtx):
+        if not self.finetune:
+            return state["params"]
+        return finetune_clients(
+            self.task, state["params"], self.clients, self.cfg.ft_epochs,
+            self.cfg.batch_size, ctx.lr, self.opt, ctx.eval_rng,
+            mask=self.mask)
+
+    def finalize_eval_params(self, state: dict):
+        if not self.finetune:
+            return state["params"]
+        cfg = self.cfg
+        return finetune_clients(
+            self.task, state["params"], self.clients, cfg.ft_epochs,
+            cfg.batch_size, cfg.lr_at(cfg.rounds), self.opt,
+            lambda k: derive_rng(cfg.seed, cfg.rounds, k, stream=STREAM_EVAL),
+            mask=self.mask)
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        per = (tree_nnz(self.mask) if self.mask is not None
+               else self.n_coords)
+        return decentralized_comm(ctx.adjacency,
+                                  [per] * len(self.clients), self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        dens = self.densities or {k: 1.0 for k in self.task.fwd_flops}
+        return sparse_training_flops(
+            self.task.fwd_flops, dens, self.n_samples, ctx.cfg.local_epochs,
+            mask_search_batches=0, batch_size=ctx.cfg.batch_size)
 
 
-def _finetune_all(task, params, clients, cfg, lr, rng, mask=None):
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
-    out = []
-    for k, c in enumerate(clients):
-        w = local_sgd(task, params[k], c.train_x, c.train_y, cfg.ft_epochs,
-                      cfg.batch_size, lr, opt, rng, mask=mask)
-        out.append(w)
-    return out
+def run_dpsgd(task: Task, clients, cfg: FLConfig, finetune: bool = False,
+              param_fraction: float = 1.0, targets=(0.5,),
+              **engine_kw) -> FLResult:
+    """Back-compat wrapper: engine run -> FLResult."""
+    return run_strategy("dpsgd", task, clients, cfg, targets=targets,
+                        finetune=finetune, param_fraction=param_fraction,
+                        **engine_kw)

@@ -1,11 +1,13 @@
-"""DisPFL (paper Alg. 1) — decentralized sparse personalized FL.
+"""DisPFL (paper Alg. 1) — decentralized sparse personalized FL, as engine
+hooks.
 
-Per communication round, synchronously for every client k:
-  1. receive neighbor models/masks per the (time-varying) topology,
-  2. intersection-weighted gossip average, re-masked by m_k (Fig. 1b),
-  3. E epochs of local SGD with gradient masking (fixed mask),
-  4. local mask search: dense gradient on one batch, cosine-annealed
-     magnitude prune + gradient regrow (Alg. 2, Fig. 1c).
+Per communication round, for every client k:
+  1. ``mix``: receive neighbor models/masks per the (time-varying) topology
+     and intersection-weighted gossip average, re-masked by m_k (Fig. 1b),
+  2. ``local_update``: E epochs of local SGD with gradient masking (fixed
+     mask) — or the engine's vmap fast path, which is schedule-identical,
+  3. ``evolve``: local mask search — dense gradient on one batch,
+     cosine-annealed magnitude prune + gradient regrow (Alg. 2, Fig. 1c).
 
 Heterogeneous clients pass per-client ``capacities`` (densities) — the ERK
 allocation gives each its own layer-density profile (paper §4.3).
@@ -16,90 +18,91 @@ import numpy as np
 import jax
 
 from repro.core.accounting import decentralized_comm, sparse_training_flops
-from repro.core.evolve import cosine_prune_rate, evolve_masks, layer_nnz_budgets
+from repro.core.evolve import evolve_masks, layer_nnz_budgets
 from repro.core.gossip import gossip_average_one
 from repro.core.masks import apply_mask, erk_densities_for_params, init_mask
-from repro.core.topology import make_adjacency
-from repro.fl.base import (
-    FLConfig,
-    FLResult,
-    Task,
-    evaluate_clients,
-    local_sgd,
-    rounds_to_targets,
-)
-from repro.optim import SGDConfig
+from repro.fl.base import FLConfig, FLResult, Task, local_sgd
+from repro.fl.engine import RoundCtx, StrategyBase, register, run_strategy
 from repro.utils.tree import tree_nnz, tree_size
 
 
-def run_dispfl(task: Task, clients, cfg: FLConfig, targets=(0.5,)) -> FLResult:
-    k_clients = len(clients)
-    rng = np.random.default_rng(cfg.seed)
-    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), 2 * k_clients)
-    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+@register("dispfl")
+class DisPFLStrategy(StrategyBase):
+    """State: ``{"params": [K trees], "masks": [K trees]}``.  ERK budgets and
+    densities are static given (cfg, model) and live on ``self``."""
 
-    # --- per-client init: model + ERK mask at capacity c_k ---------------
-    params = [task.init_fn(keys[k]) for k in range(k_clients)]
-    densities = [
-        erk_densities_for_params(params[k], cfg.client_density(k))
-        for k in range(k_clients)
-    ]
-    masks = [
-        init_mask(keys[k_clients + k], params[k], cfg.client_density(k))
-        for k in range(k_clients)
-    ]
-    nnz_budgets = [layer_nnz_budgets(params[k], densities[k]) for k in range(k_clients)]
-    params = [apply_mask(p, m) for p, m in zip(params, masks)]
+    vmap_capable = True
 
-    history: list[float] = []
-    adjacency0 = None
-    for t in range(cfg.rounds):
-        lr = cfg.lr_at(t)
-        alpha_t = cosine_prune_rate(cfg.alpha0, t, cfg.rounds)
-        a = make_adjacency(cfg.topology, k_clients, t, cfg.degree, cfg.seed,
-                           cfg.drop_prob)
-        if adjacency0 is None:
-            adjacency0 = a
-        new_params, new_masks = [], []
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        super().init_state(task, clients, cfg)
+        k_clients = len(clients)
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), 2 * k_clients)
+        params = [task.init_fn(keys[k]) for k in range(k_clients)]
+        self.densities = [
+            erk_densities_for_params(params[k], cfg.client_density(k))
+            for k in range(k_clients)
+        ]
+        masks = [
+            init_mask(keys[k_clients + k], params[k], cfg.client_density(k))
+            for k in range(k_clients)
+        ]
+        self.budgets = [layer_nnz_budgets(params[k], self.densities[k])
+                        for k in range(k_clients)]
+        self.n_coords = tree_size(params[0])
+        params = [apply_mask(p, m) for p, m in zip(params, masks)]
+        return {"params": params, "masks": masks}
+
+    def mix(self, state: dict, ctx: RoundCtx) -> None:
+        a = ctx.adjacency
+        params, masks = state["params"], state["masks"]
+        k_clients = len(params)
+        mixed = []
         for k in range(k_clients):
             nbrs = [j for j in range(k_clients) if a[k, j] > 0 and j != k]
-            # (1)+(2) intersection-weighted gossip
-            w = gossip_average_one(
+            mixed.append(gossip_average_one(
                 params[k], masks[k],
-                [params[j] for j in nbrs], [masks[j] for j in nbrs])
-            # (3) local sparse training with fixed mask
-            c = clients[k]
-            w = local_sgd(task, w, c.train_x, c.train_y, cfg.local_epochs,
-                          cfg.batch_size, lr, opt, rng, mask=masks[k])
-            # (4) mask search with one dense-gradient batch
-            xb, yb = c.sample_batch(rng, cfg.batch_size)
-            _, g = task.value_and_grad(w, xb, yb)
-            m_new, w = evolve_masks(w, masks[k], g, alpha_t, nnz_budgets[k])
-            new_params.append(w)
-            new_masks.append(m_new)
-        params, masks = new_params, new_masks
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+                [params[j] for j in nbrs], [masks[j] for j in nbrs]))
+        state["params"] = mixed
 
-    # --- accounting -------------------------------------------------------
-    n_coords = tree_size(params[0])
-    nnz = [tree_nnz(m) for m in masks]
-    comm = decentralized_comm(adjacency0, nnz, n_coords)
-    n_samples = int(np.mean([c.n_train for c in clients]))
-    flops = sparse_training_flops(
-        task.fwd_flops, _mean_density(densities), n_samples, cfg.local_epochs,
-        mask_search_batches=1, batch_size=cfg.batch_size)
-    final = evaluate_clients(task, params, clients)
-    return FLResult(
-        acc_history=history, final_accs=final,
-        comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
-        flops_per_round=flops.per_round_flops, flops_rows=flops.row(),
-        rounds_to=rounds_to_targets(history, list(targets)))
+    def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        c = self.clients[k]
+        state["params"][k] = local_sgd(
+            self.task, state["params"][k], c.train_x, c.train_y,
+            ctx.cfg.local_epochs, ctx.cfg.batch_size, ctx.lr, self.opt,
+            ctx.client_rng(k), mask=state["masks"][k])
+
+    def local_mask(self, state: dict, k: int):
+        return state["masks"][k]
+
+    def evolve(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        xb, yb = self.clients[k].sample_batch(ctx.client_rng(k),
+                                              ctx.cfg.batch_size)
+        _, g = self.task.value_and_grad(state["params"][k], xb, yb)
+        m_new, w_new = evolve_masks(state["params"][k], state["masks"][k], g,
+                                    ctx.prune_rate, self.budgets[k])
+        state["masks"][k], state["params"][k] = m_new, w_new
+
+    def round_comm(self, state: dict, ctx: RoundCtx):
+        nnz = [tree_nnz(m) for m in state["masks"]]
+        return decentralized_comm(ctx.adjacency, nnz, self.n_coords)
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        return sparse_training_flops(
+            self.task.fwd_flops, _mean_density(self.densities),
+            self.n_samples, ctx.cfg.local_epochs,
+            mask_search_batches=1, batch_size=ctx.cfg.batch_size)
 
 
 def _mean_density(densities: list[dict[str, float]]) -> dict[str, float]:
     keys = densities[0].keys()
     return {k: float(np.mean([d[k] for d in densities])) for k in keys}
+
+
+def run_dispfl(task: Task, clients, cfg: FLConfig, targets=(0.5,),
+               **engine_kw) -> FLResult:
+    """Back-compat wrapper: engine run -> FLResult."""
+    return run_strategy("dispfl", task, clients, cfg, targets=targets,
+                        **engine_kw)
 
 
 def dispfl_state(task: Task, cfg: FLConfig):

@@ -122,6 +122,8 @@ def run_one(arch_name: str, shape_name: str, multi_pod: bool,
 
     # ---- cost ------------------------------------------------------------
     cost_raw = compiled.cost_analysis()
+    if isinstance(cost_raw, (list, tuple)):  # jax<=0.4.x: list of dicts
+        cost_raw = cost_raw[0] if cost_raw else {}
     cost = {k: float(v) for k, v in cost_raw.items()
             if isinstance(v, (int, float)) and k in
             ("flops", "bytes accessed", "optimal_seconds")}

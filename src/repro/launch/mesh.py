@@ -3,7 +3,19 @@ never touches jax device state; see MULTI-POD DRY-RUN step 1)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # AxisType landed after jax 0.4.x; explicit-Auto is optional before it
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -12,17 +24,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     DisPFL clients (DESIGN.md §3 cross-pod gossip)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0) -> Mesh:
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count
     >= data*model*max(pods,1) set before jax initializes)."""
     if pods:
-        return jax.make_mesh((pods, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pods, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def client_capacity(mesh: Mesh) -> int:

@@ -28,7 +28,15 @@ import numpy as np
 def run_simulate(args) -> dict:
     from repro.checkpoint import save_clients
     from repro.data import build_federated_image_task
-    from repro.fl import FLConfig, make_cnn_task, run_strategy
+    from repro.fl import (
+        Checkpointer,
+        EarlyStopAtTarget,
+        FLConfig,
+        JsonlLogger,
+        RoundEngine,
+        make_cnn_task,
+        make_strategy,
+    )
 
     clients, _ = build_federated_image_task(
         args.seed, n_clients=args.clients, partition=args.partition,
@@ -46,8 +54,29 @@ def run_simulate(args) -> dict:
         lr0=args.lr, topology=args.topology, degree=args.degree,
         density=args.density, capacities=capacities, seed=args.seed,
         drop_prob=args.drop_prob, eval_every=args.eval_every)
+
+    callbacks = []
+    if args.log_jsonl:
+        callbacks.append(JsonlLogger(args.log_jsonl))
+    if args.checkpoint:
+        callbacks.append(Checkpointer(args.checkpoint,
+                                      every=args.checkpoint_every))
+    if args.target > 0:
+        callbacks.append(EarlyStopAtTarget(args.target))
+    engine = RoundEngine(make_strategy(args.strategy), task, clients, cfg,
+                         callbacks=callbacks, local_exec=args.local_exec)
+    if args.resume:
+        engine.restore(args.resume)
+        print(f"resumed from {args.resume} at round {engine._next_round}")
+
     t0 = time.time()
-    res = run_strategy(args.strategy, task, clients, cfg)
+    for m in engine.rounds():
+        if m.acc_mean is not None:
+            print(f"[round {m.round + 1}/{cfg.rounds}] "
+                  f"acc={m.acc_mean:.3f}±{m.acc_std:.3f} "
+                  f"comm={m.comm_busiest_mb:.2f}MB lr={m.lr:.4f} "
+                  f"({m.wall_s:.1f}s)")
+    res = engine.result()
     out = {
         "strategy": args.strategy, "partition": args.partition,
         "final_acc": res.final_acc, "acc_history": res.acc_history,
@@ -183,6 +212,19 @@ def main() -> None:
     sim.add_argument("--eval-every", type=int, default=1, dest="eval_every")
     sim.add_argument("--seed", type=int, default=0)
     sim.add_argument("--save", default="")
+    sim.add_argument("--exec", default="auto", dest="local_exec",
+                     choices=["auto", "loop", "vmap"],
+                     help="local-phase execution: vmap = stacked fast path")
+    sim.add_argument("--log-jsonl", default="", dest="log_jsonl",
+                     help="stream per-round RoundMetrics to this JSONL file")
+    sim.add_argument("--checkpoint", default="",
+                     help="save engine state to this .npz after rounds")
+    sim.add_argument("--checkpoint-every", type=int, default=1,
+                     dest="checkpoint_every")
+    sim.add_argument("--resume", default="",
+                     help="restore engine state from this .npz and continue")
+    sim.add_argument("--target", type=float, default=0.0,
+                     help="early-stop once mean personalized acc >= target")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", default="qwen3-8b")

@@ -243,7 +243,8 @@ def _sub_for(cfg, kinds, idx):
 
 
 def forward_train(params, tokens, cfg: ModelConfig, prefix=None, remat: bool = True,
-                  unroll: bool = False, remat_policy: str = "full"):
+                  unroll: bool = False, remat_policy: str = "full",
+                  moe_dense: bool = False):
     """tokens: (B, S_text); prefix: optional (B, P, d).  Returns
     (logits (B, S_total, V), aux_loss scalar)."""
     prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
@@ -253,7 +254,8 @@ def forward_train(params, tokens, cfg: ModelConfig, prefix=None, remat: bool = T
     aux_total = jnp.zeros((), jnp.float32)
 
     for i in prelude:
-        x, _, a = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg, positions)
+        x, _, a = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg, positions,
+                              moe_dense=moe_dense)
         aux_total += a
 
     if n_blocks > 0:
@@ -263,7 +265,8 @@ def forward_train(params, tokens, cfg: ModelConfig, prefix=None, remat: bool = T
             aux = jnp.zeros((), jnp.float32)
             for j in range(period):
                 sub = kinds[start + j]  # same structure for every block
-                x, _, a = layer_apply(block_params[f"p{j}"], x, sub, cfg, positions)
+                x, _, a = layer_apply(block_params[f"p{j}"], x, sub, cfg, positions,
+                                      moe_dense=moe_dense)
                 aux += a
             return x, aux
 
@@ -281,14 +284,15 @@ def forward_train(params, tokens, cfg: ModelConfig, prefix=None, remat: bool = T
         aux_total += jnp.sum(auxs)
 
     for i in tail:
-        x, _, a = layer_apply(params["tail"][str(i)], x, kinds[i], cfg, positions)
+        x, _, a = layer_apply(params["tail"][str(i)], x, kinds[i], cfg, positions,
+                              moe_dense=moe_dense)
         aux_total += a
 
     return _head(params, x, cfg), aux_total
 
 
 def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
-                    unroll: bool = False):
+                    unroll: bool = False, moe_dense: bool = False):
     """Full-sequence forward writing caches.  Returns (logits, cache)."""
     prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
     x = _embed(params, tokens, cfg, prefix)
@@ -298,7 +302,7 @@ def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
 
     for i in prelude:
         x, c, _ = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg,
-                              positions, cache=cache["prelude"][str(i)])
+                              positions, cache=cache["prelude"][str(i)], moe_dense=moe_dense)
         new_cache["prelude"][str(i)] = c
 
     if n_blocks > 0:
@@ -310,7 +314,7 @@ def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
             for j in range(period):
                 sub = kinds[start + j]
                 x, c, _ = layer_apply(block_params[f"p{j}"], x, sub, cfg,
-                                      positions, cache=block_cache[f"p{j}"])
+                                      positions, cache=block_cache[f"p{j}"], moe_dense=moe_dense)
                 outs[f"p{j}"] = c
             return x, outs
 
@@ -320,7 +324,7 @@ def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
 
     for i in tail:
         x, c, _ = layer_apply(params["tail"][str(i)], x, kinds[i], cfg,
-                              positions, cache=cache["tail"][str(i)])
+                              positions, cache=cache["tail"][str(i)], moe_dense=moe_dense)
         new_cache["tail"][str(i)] = c
 
     logits = _head(params, x[:, -1:, :], cfg)
@@ -328,7 +332,7 @@ def forward_prefill(params, tokens, cfg: ModelConfig, cache, prefix=None,
 
 
 def forward_decode(params, tokens, pos, cfg: ModelConfig, cache,
-                   unroll: bool = False):
+                   unroll: bool = False, moe_dense: bool = False):
     """One-token decode.  tokens: (B, 1); pos: scalar int32 (current write
     position, == number of tokens already in cache).  Returns (logits, cache)."""
     prelude, period, n_blocks, tail, kinds = layer_plan(cfg)
@@ -339,7 +343,7 @@ def forward_decode(params, tokens, pos, cfg: ModelConfig, cache,
 
     for i in prelude:
         x, c, _ = layer_apply(params["prelude"][str(i)], x, kinds[i], cfg,
-                              positions, cache=cache["prelude"][str(i)], pos=pos)
+                              positions, cache=cache["prelude"][str(i)], pos=pos, moe_dense=moe_dense)
         new_cache["prelude"][str(i)] = c
 
     if n_blocks > 0:
@@ -351,7 +355,7 @@ def forward_decode(params, tokens, pos, cfg: ModelConfig, cache,
             for j in range(period):
                 sub = kinds[start + j]
                 x, c, _ = layer_apply(block_params[f"p{j}"], x, sub, cfg,
-                                      positions, cache=block_cache[f"p{j}"], pos=pos)
+                                      positions, cache=block_cache[f"p{j}"], pos=pos, moe_dense=moe_dense)
                 outs[f"p{j}"] = c
             return x, outs
 
@@ -361,7 +365,7 @@ def forward_decode(params, tokens, pos, cfg: ModelConfig, cache,
 
     for i in tail:
         x, c, _ = layer_apply(params["tail"][str(i)], x, kinds[i], cfg,
-                              positions, cache=cache["tail"][str(i)], pos=pos)
+                              positions, cache=cache["tail"][str(i)], pos=pos, moe_dense=moe_dense)
         new_cache["tail"][str(i)] = c
 
     return _head(params, x, cfg), new_cache

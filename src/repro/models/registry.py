@@ -68,17 +68,19 @@ def _bind_lm(cfg: ModelConfig, moe_dense: bool, remat: bool,
         logits, aux = lm_mod.forward_train(params, batch["tokens"], cfg,
                                            prefix=prefix, remat=remat,
                                            unroll=unroll,
-                                           remat_policy=remat_policy)
+                                           remat_policy=remat_policy,
+                                           moe_dense=moe_dense)
         loss = softmax_xent(logits, batch["labels"])
         return loss + aux, {"xent": loss, "aux": aux}
 
     def prefill(params, batch, cache):
         return lm_mod.forward_prefill(params, batch["tokens"], cfg, cache,
-                                      prefix=batch.get("prefix"), unroll=unroll)
+                                      prefix=batch.get("prefix"),
+                                      unroll=unroll, moe_dense=moe_dense)
 
     def decode(params, tokens, pos, cache):
         return lm_mod.forward_decode(params, tokens, pos, cfg, cache,
-                                     unroll=unroll)
+                                     unroll=unroll, moe_dense=moe_dense)
 
     def init_cache(batch_size, max_len, dtype=jnp.float32):
         return lm_mod.init_cache(cfg, batch_size, max_len, dtype)

@@ -1,0 +1,84 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Implements just the surface the test suite uses — ``given`` with keyword
+strategies, ``settings(max_examples=, deadline=)`` and the ``integers`` /
+``floats`` / ``lists`` / ``tuples`` / ``sampled_from`` strategies — by
+sampling a fixed-seed batch of examples per test.  Far weaker than real
+hypothesis (no shrinking, no edge-case bias), but it keeps the property
+tests running in hermetic environments; when hypothesis is importable the
+real library is used instead (see the try/except at each import site).
+"""
+from __future__ import annotations
+
+
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(lambda rng: [
+        elements.sample(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))
+    ])
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+class _St:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+    sampled_from = staticmethod(sampled_from)
+
+
+st = _St()
+
+_DEFAULT_EXAMPLES = 10
+
+
+def given(**strategies):
+    def deco(fn):
+        # deliberately no functools.wraps: pytest must see the bare
+        # (*args, **kwargs) signature, not the strategy params as fixtures
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            for _ in range(wrapper._max_examples):
+                example = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(*args, **example, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._max_examples = _DEFAULT_EXAMPLES
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -24,6 +24,8 @@ from repro.core.topology import fully_connected, ring, time_varying_random
 from repro.models import cnn
 from repro.utils.tree import tree_leaves_with_path, tree_size
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def resnet18():

@@ -95,7 +95,8 @@ def test_decode_matches_teacher_forcing(name):
     s = s0 + steps
     toks = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0, cfg.vocab)
     from repro.models import lm as lm_mod
-    full_logits, _ = lm_mod.forward_train(params, toks, cfg, remat=False)
+    full_logits, _ = lm_mod.forward_train(params, toks, cfg, remat=False,
+                                          moe_dense=True)
 
     cache = api.init_cache(b, s)
     logits, cache = api.prefill(params, {"tokens": toks[:, :s0]}, cache)

@@ -1,0 +1,281 @@
+"""RoundEngine: golden equivalence vs reference loops, checkpoint/resume,
+vmap fast path, registry, streaming metrics and callbacks."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.evolve import cosine_prune_rate, evolve_masks, layer_nnz_budgets
+from repro.core.gossip import gossip_average_one
+from repro.core.masks import apply_mask, erk_densities_for_params, init_mask
+from repro.core.topology import make_adjacency
+from repro.fl import (
+    Checkpointer,
+    EarlyStopAtTarget,
+    FLConfig,
+    JsonlLogger,
+    RoundEngine,
+    make_cnn_task,
+    make_strategy,
+    run_strategy,
+)
+from repro.fl.base import evaluate_clients, local_sgd
+from repro.fl.decentralized import metropolis_weights
+from repro.fl.engine import StrategyBase, _pack, _unpack, derive_rng, register
+from repro.data import build_federated_image_task
+from repro.optim import SGDConfig
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture(scope="module")
+def setup():
+    clients, _ = build_federated_image_task(
+        0, n_clients=4, partition="pathological", classes_per_client=2,
+        n_train_per_class=24, n_test_per_client=16, hw=8, noise=0.7)
+    task = make_cnn_task("smallcnn", 10, 8, width=4)
+    cfg = FLConfig(n_clients=4, rounds=3, local_epochs=2, batch_size=16,
+                   degree=2, eval_every=1)
+    return task, clients, cfg
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: engine-ported strategies == straight-line reference
+# loops (same per-(seed, round, client) rng derivation), bit for bit.
+# ---------------------------------------------------------------------------
+
+
+def _reference_dispfl(task, clients, cfg):
+    """DisPFL as one flat loop — the seed semantics with derived seeds."""
+    k_clients = len(clients)
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), 2 * k_clients)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    params = [task.init_fn(keys[k]) for k in range(k_clients)]
+    densities = [erk_densities_for_params(params[k], cfg.client_density(k))
+                 for k in range(k_clients)]
+    masks = [init_mask(keys[k_clients + k], params[k], cfg.client_density(k))
+             for k in range(k_clients)]
+    budgets = [layer_nnz_budgets(params[k], densities[k])
+               for k in range(k_clients)]
+    params = [apply_mask(p, m) for p, m in zip(params, masks)]
+    history = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        alpha = cosine_prune_rate(cfg.alpha0, t, cfg.rounds)
+        a = make_adjacency(cfg.topology, k_clients, t, cfg.degree, cfg.seed,
+                           cfg.drop_prob)
+        mixed = []
+        for k in range(k_clients):
+            nbrs = [j for j in range(k_clients) if a[k, j] > 0 and j != k]
+            mixed.append(gossip_average_one(
+                params[k], masks[k],
+                [params[j] for j in nbrs], [masks[j] for j in nbrs]))
+        new_params, new_masks = [], []
+        for k in range(k_clients):
+            rng = derive_rng(cfg.seed, t, k)
+            c = clients[k]
+            w = local_sgd(task, mixed[k], c.train_x, c.train_y,
+                          cfg.local_epochs, cfg.batch_size, lr, opt, rng,
+                          mask=masks[k])
+            xb, yb = c.sample_batch(rng, cfg.batch_size)
+            _, g = task.value_and_grad(w, xb, yb)
+            m_new, w = evolve_masks(w, masks[k], g, alpha, budgets[k])
+            new_params.append(w)
+            new_masks.append(m_new)
+        params, masks = new_params, new_masks
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+    return params, masks, history
+
+
+def _reference_dpsgd(task, clients, cfg):
+    k_clients = len(clients)
+    opt = SGDConfig(momentum=cfg.momentum, weight_decay=cfg.weight_decay)
+    w0 = task.init_fn(jax.random.PRNGKey(cfg.seed))
+    params = [jax.tree.map(lambda x: x, w0) for _ in range(k_clients)]
+    history = []
+    for t in range(cfg.rounds):
+        lr = cfg.lr_at(t)
+        a = make_adjacency(cfg.topology, k_clients, t, cfg.degree, cfg.seed,
+                           cfg.drop_prob)
+        w_mix = metropolis_weights(a)
+        mixed = []
+        for k in range(k_clients):
+            acc = None
+            for j in range(k_clients):
+                if w_mix[k, j] == 0.0:
+                    continue
+                contrib = jax.tree.map(lambda x: w_mix[k, j] * x, params[j])
+                acc = contrib if acc is None else jax.tree.map(
+                    lambda u, v: u + v, acc, contrib)
+            mixed.append(acc)
+        params = [
+            local_sgd(task, mixed[k], clients[k].train_x, clients[k].train_y,
+                      cfg.local_epochs, cfg.batch_size, lr, opt,
+                      derive_rng(cfg.seed, t, k))
+            for k in range(k_clients)
+        ]
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            history.append(float(np.mean(evaluate_clients(task, params, clients))))
+    return params, history
+
+
+def test_dispfl_golden_equivalence(setup):
+    task, clients, cfg = setup
+    ref_params, ref_masks, ref_hist = _reference_dispfl(task, clients, cfg)
+    eng = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="loop")
+    res = eng.run()
+    assert res.acc_history == ref_hist
+    for k in range(len(clients)):
+        assert _trees_equal(eng.state["params"][k], ref_params[k])
+        assert _trees_equal(eng.state["masks"][k], ref_masks[k])
+
+
+def test_dpsgd_golden_equivalence(setup):
+    task, clients, cfg = setup
+    ref_params, ref_hist = _reference_dpsgd(task, clients, cfg)
+    eng = RoundEngine(make_strategy("dpsgd"), task, clients, cfg,
+                      local_exec="loop")
+    res = eng.run()
+    assert res.acc_history == ref_hist
+    for k in range(len(clients)):
+        assert _trees_equal(eng.state["params"][k], ref_params[k])
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip():
+    state = {"params": [{"a": np.ones(2)}, {"a": np.zeros(2)}],
+             "w": {"nested": np.arange(3)}}
+    packed = _pack(state)
+    out = _unpack(packed)
+    assert isinstance(out["params"], list) and len(out["params"]) == 2
+    assert np.array_equal(out["params"][1]["a"], np.zeros(2))
+    assert np.array_equal(out["w"]["nested"], np.arange(3))
+
+
+@pytest.mark.parametrize("name", ["dispfl", "fedavg"])
+def test_checkpoint_resume_matches_uninterrupted(name, setup, tmp_path):
+    task, clients, cfg = setup
+    path = str(tmp_path / f"{name}.npz")
+    # interrupted run: stop after 2 of 3 rounds, checkpointing each round
+    eng_a = RoundEngine(make_strategy(name), task, clients, cfg,
+                        local_exec="loop", callbacks=[Checkpointer(path)])
+    it = eng_a.rounds()
+    next(it)
+    next(it)
+    # resume into a fresh engine and finish
+    eng_b = RoundEngine(make_strategy(name), task, clients, cfg,
+                        local_exec="loop").restore(path)
+    res_b = eng_b.run()
+    # uninterrupted reference
+    eng_c = RoundEngine(make_strategy(name), task, clients, cfg,
+                        local_exec="loop")
+    res_c = eng_c.run()
+    assert res_b.acc_history == res_c.acc_history
+    assert res_b.final_accs == res_c.final_accs
+    assert res_b.comm_busiest_mb == pytest.approx(res_c.comm_busiest_mb)
+    assert _trees_equal(eng_b.state, eng_c.state)
+
+
+# ---------------------------------------------------------------------------
+# vmap fast path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["dispfl", "dpsgd", "local", "fedavg"])
+def test_vmap_matches_loop(name, setup):
+    task, clients, cfg = setup
+    res_loop = run_strategy(name, task, clients, cfg, local_exec="loop")
+    res_vmap = run_strategy(name, task, clients, cfg, local_exec="vmap")
+    np.testing.assert_allclose(res_vmap.final_accs, res_loop.final_accs,
+                               atol=5e-2)
+    np.testing.assert_allclose(res_vmap.acc_history, res_loop.acc_history,
+                               atol=5e-2)
+
+
+def test_vmap_refuses_momentum(setup):
+    task, clients, _ = setup
+    cfg = FLConfig(n_clients=4, rounds=1, local_epochs=1, batch_size=16,
+                   degree=2, momentum=0.9)
+    with pytest.raises(ValueError):
+        run_strategy("dispfl", task, clients, cfg, local_exec="vmap")
+
+
+def test_auto_falls_back_on_heterogeneous(setup):
+    task, clients, _ = setup
+    cfg = FLConfig(n_clients=4, rounds=1, local_epochs=1, batch_size=16,
+                   degree=2, capacities=[0.2, 0.4, 0.6, 0.8], eval_every=1)
+    res = run_strategy("dispfl", task, clients, cfg)  # auto -> loop, no raise
+    assert len(res.final_accs) == 4
+
+
+# ---------------------------------------------------------------------------
+# Streaming metrics, callbacks, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_metrics_and_mean_comm(setup):
+    task, clients, cfg = setup
+    eng = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="loop")
+    seen = list(eng.rounds())
+    assert [m.round for m in seen] == list(range(cfg.rounds))
+    assert all(m.acc_mean is not None for m in seen)  # eval_every=1
+    assert all(m.comm_busiest_mb > 0 for m in seen)
+    cum = [m.cum_flops for m in seen]
+    assert all(b > a for a, b in zip(cum, cum[1:]))
+    res = eng.result()
+    # FLResult reports the MEAN over rounds of the per-round busiest-node
+    # comm (time-varying adjacency), not the round-0 snapshot
+    assert res.comm_busiest_mb == pytest.approx(
+        np.mean([m.comm_busiest_mb for m in seen]))
+
+
+def test_jsonl_logger_and_early_stop(setup, tmp_path):
+    import json
+    task, clients, cfg = setup
+    log = str(tmp_path / "rounds.jsonl")
+    eng = RoundEngine(make_strategy("local"), task, clients, cfg,
+                      callbacks=[JsonlLogger(log), EarlyStopAtTarget(0.0)])
+    eng.run()
+    rows = [json.loads(l) for l in open(log)]
+    assert len(rows) == 1  # target 0.0 stops after the first evaluated round
+    assert {"round", "lr", "acc_mean", "comm_busiest_mb"} <= set(rows[0])
+
+
+def test_registry_custom_strategy(setup):
+    task, clients, cfg = setup
+
+    @register("_test_noop")
+    class NoopStrategy(StrategyBase):
+        def init_state(self, task, clients, cfg):
+            super().init_state(task, clients, cfg)
+            keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(clients))
+            return {"params": [task.init_fn(k) for k in keys]}
+
+        def local_update(self, state, k, ctx):
+            pass
+
+        def round_flops(self, state, ctx):
+            from repro.core.accounting import sparse_training_flops
+            return sparse_training_flops(
+                self.task.fwd_flops, {k: 1.0 for k in self.task.fwd_flops},
+                self.n_samples, 0)
+
+    res = run_strategy("_test_noop", task, clients, cfg)
+    assert len(res.final_accs) == len(clients)
+    with pytest.raises(KeyError):
+        run_strategy("definitely_not_registered", task, clients, cfg)

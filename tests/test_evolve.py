@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: fixed-seed sampling fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.evolve import (
     cosine_prune_rate,
@@ -13,6 +16,8 @@ from repro.core.evolve import (
     layer_nnz_budgets,
 )
 from repro.core.masks import erk_densities_for_params, init_mask, apply_mask
+
+pytestmark = pytest.mark.tier1
 
 
 def test_cosine_annealing_endpoints():

@@ -5,6 +5,8 @@ import pytest
 from repro.data import build_federated_image_task
 from repro.fl import FLConfig, make_cnn_task, run_strategy, STRATEGIES
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def setup():

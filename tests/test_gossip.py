@@ -3,7 +3,11 @@ consistency, Pallas kernel agreement."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: fixed-seed sampling fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.gossip import (
     gossip_average_one,
@@ -12,6 +16,8 @@ from repro.core.gossip import (
 )
 from repro.core.topology import fully_connected, mixing_matrix
 from repro.kernels import ops as kops
+
+pytestmark = pytest.mark.tier1
 
 
 def test_hand_example():

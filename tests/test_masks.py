@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: fixed-seed sampling fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.masks import (
     apply_mask,
@@ -13,6 +16,8 @@ from repro.core.masks import (
     init_mask,
     mask_density,
 )
+
+pytestmark = pytest.mark.tier1
 
 
 def _params(key=0):

@@ -1,6 +1,10 @@
 """Topology properties: degrees, self-loops, busiest-node bound, dropping."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: fixed-seed sampling fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.topology import (
     busiest_node_degree,
@@ -11,6 +15,8 @@ from repro.core.topology import (
     time_varying_random,
 )
 from repro.fl.decentralized import metropolis_weights
+
+pytestmark = pytest.mark.tier1
 
 
 def test_ring_degrees():
@@ -65,3 +71,40 @@ def test_metropolis_doubly_stochastic():
     assert np.allclose(w.sum(1), 1.0, atol=1e-9)
     assert np.allclose(w, w.T)
     assert np.all(w >= -1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(["random", "ring", "fc"]),
+       n=st.integers(3, 32), deg=st.integers(1, 10),
+       r=st.integers(0, 4), seed=st.integers(0, 20))
+def test_metropolis_doubly_stochastic_property(kind, n, deg, r, seed):
+    """Double stochasticity + symmetry for every topology family."""
+    a = make_adjacency(kind, n, r, degree=deg, seed=seed)
+    w = metropolis_weights(a)
+    assert np.allclose(w.sum(0), 1.0, atol=1e-9)
+    assert np.allclose(w.sum(1), 1.0, atol=1e-9)
+    assert np.allclose(w, w.T)
+    assert np.all(w >= -1e-12)
+
+
+def _metropolis_reference(a: np.ndarray) -> np.ndarray:
+    """The seed's O(K^2) double loop, kept as the oracle."""
+    sym = ((a + a.T) > 0).astype(float)
+    np.fill_diagonal(sym, 0.0)
+    deg = sym.sum(1)
+    k = len(a)
+    w = np.zeros_like(sym)
+    for i in range(k):
+        for j in range(k):
+            if sym[i, j] > 0:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    for i in range(k):
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 24), deg=st.integers(1, 8), seed=st.integers(0, 50))
+def test_metropolis_matches_reference_loop(n, deg, seed):
+    a = make_adjacency("random", n, 0, degree=deg, seed=seed)
+    assert np.allclose(metropolis_weights(a), _metropolis_reference(a))
