@@ -1,14 +1,15 @@
 # Repo verification entry points (see ROADMAP.md "Tier-1 verify").
 #
-#   make verify   - full test suite + a smoke run of the training launcher
-#   make tier1    - only the tier1-marked fast core tests
-#   make test     - full test suite
+#   make verify    - full test suite + smoke runs of the launchers
+#   make tier1     - only the tier1-marked fast core tests
+#   make test      - full test suite
+#   make sim-smoke - event-driven async network simulator smoke run
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test tier1 smoke
+.PHONY: verify test tier1 smoke sim-smoke
 
-verify: test smoke
+verify: test smoke sim-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,3 +20,8 @@ tier1:
 smoke:
 	$(PY) -m repro.launch.train simulate --strategy dispfl --rounds 2 \
 	    --clients 4 --local-epochs 1 --samples-per-class 20 --eval-every 2
+
+sim-smoke:
+	$(PY) -m repro.launch.train simulate --sim --async --strategy dispfl \
+	    --rounds 3 --clients 4 --local-epochs 1 --samples-per-class 20 \
+	    --eval-every 3 --staleness 2 --compute-hetero --bandwidth-skew 10

@@ -1,4 +1,15 @@
-"""Paper Fig 6 (App. B.6): robustness to random client dropping."""
+"""Paper Fig 6 (App. B.6): robustness to random client dropping.
+
+The dropping experiment now routes through ``repro.sim.availability`` — the
+same Bernoulli failure model the event simulator uses (one draw per (seed,
+round), shared via ``core.topology.bernoulli_alive``) — and runs inside the
+simulator's synchronous mode, so every row also reports the measured
+busiest-node traffic under dropping (dropped clients transfer nothing).
+
+Note the seed code passed ``drop_prob`` with the fully-connected topology,
+which silently ignored it; availability-driven dropping applies to every
+topology kind.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,20 +18,27 @@ from benchmarks.common import fl_setup, timer
 
 
 def run(fast: bool = True) -> list[dict]:
-    from repro.fl import run_strategy
+    from repro.fl import make_strategy, run_strategy
+    from repro.sim import BernoulliAvailability, SimEngine
 
     rows = []
     task, clients, base = fl_setup(fast, "dirichlet")
     probs = (0.0, 0.5) if fast else (0.0, 0.2, 0.5, 0.8)
     accs = {}
     for p in probs:
-        cfg = dataclasses.replace(base, topology="fc", drop_prob=p)
+        cfg = dataclasses.replace(base, topology="fc")
+        avail = BernoulliAvailability(cfg.n_clients, p, seed=cfg.seed)
+        trace = [avail.alive(t).mean() for t in range(cfg.rounds)]
+        eng = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                        mode="sync", availability=avail, round_s=1.0)
         with timer() as t:
-            res = run_strategy("dispfl", task, clients, cfg)
+            res = eng.run()
         accs[p] = res.final_acc
         rows.append({"name": f"fig6/drop_{p}",
                      "us_per_call": round(t["s"] * 1e6 / max(cfg.rounds, 1)),
-                     "acc": round(res.final_acc, 4)})
+                     "acc": round(res.final_acc, 4),
+                     "alive_frac": round(sum(trace) / len(trace), 3),
+                     "busiest_MB": round(eng.stats.busiest_node()[1], 2)})
     # local baseline for reference (dropping can't hurt below local-only)
     res_local = run_strategy("local", task, clients, base)
     rows.append({"name": "fig6/local_baseline",

@@ -24,6 +24,7 @@ MODULES = [
     "table5_convergence",  # Tables 5-7
     "fig5_masks",        # Fig 5
     "fig6_dropping",     # Fig 6
+    "sim_async",         # §Sim: sync vs async wall-clock + busiest-node MB
     "engine_vmap",       # §Perf: loop vs vmap local phase at K>=16
     "roofline",          # dry-run roofline aggregation
 ]

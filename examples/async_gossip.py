@@ -1,0 +1,55 @@
+"""Asynchronous DisPFL on a simulated heterogeneous network.
+
+Eight clients with 0.2x..1.0x compute speeds train decentralized sparse
+models through ``repro.sim.SimEngine``, twice on identical data and links:
+
+* synchronous barrier — every round waits for the slowest client,
+* async gossip (staleness <= 2) — fast clients keep training and mix
+  whichever neighbor models have physically arrived.
+
+The simulator measures every transfer (payload = sender's mask nnz), so the
+busiest-node MB and wall-clock below are observed, not assumed.
+
+    PYTHONPATH=src python examples/async_gossip.py
+"""
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, make_cnn_task, make_strategy
+from repro.sim import LinkModel, SimEngine, hetero_speeds
+from repro.sim.report import time_to_target
+
+K, ROUNDS = 8, 10
+
+clients, _ = build_federated_image_task(
+    0, n_clients=K, partition="dirichlet", alpha=0.3,
+    n_train_per_class=40, n_test_per_client=24, hw=8, noise=0.8)
+task = make_cnn_task("smallcnn", n_classes=10, hw=8, width=8)
+cfg = FLConfig(n_clients=K, rounds=ROUNDS, local_epochs=2, batch_size=16,
+               degree=3, eval_every=2)
+
+speeds = hetero_speeds(K, seed=0)          # 0.2x .. 1.0x, shuffled
+links = LinkModel.uniform(K, mbps=50, latency_ms=20)
+print(f"clients={K} speeds={[round(float(s), 1) for s in speeds]}")
+
+engines = {}
+for mode, staleness in (("sync", 0), ("async", 2)):
+    eng = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                    mode=mode, staleness=staleness, links=links,
+                    round_s=1.0, compute_speeds=speeds)
+    for m in eng.rounds():
+        if m.acc_mean is not None:
+            print(f"  [{mode}] round {m.round + 1:2d} "
+                  f"acc={m.acc_mean:.3f} t_sim={m.sim_time_s:7.2f}s "
+                  f"busiest={m.busiest_up_mb:.2f}MB up")
+    engines[mode] = eng
+
+target = min(max(a for _, a in e.acc_trace) for e in engines.values()) - 1e-9
+print(f"\ncommon target accuracy: {target:.3f}")
+for mode, eng in engines.items():
+    hit = time_to_target(eng.acc_trace, target)
+    rep = eng.report(targets=(target,))
+    print(f"{mode:>5}: wall={eng.sim_time:7.2f}s  to-target={hit:7.2f}s  "
+          f"busiest-node={rep.busiest_node} "
+          f"({rep.busiest_up_mb:.2f}MB up / {rep.busiest_down_mb:.2f}MB down)")
+print(f"async observed staleness spread: "
+      f"{engines['async'].observed_spread} rounds "
+      f"(bound {engines['async'].staleness})")

@@ -51,6 +51,30 @@ def payload_bytes(n_values: int, n_coords: int = 0, with_bitmap: bool = False) -
     return b
 
 
+def message_bytes(nnz: int, n_coords: int = 0, with_bitmap: bool = False) -> float:
+    """On-wire size of one model message whose sender mask holds ``nnz``
+    values.  The simulator (``repro.sim``) measures every transfer with this
+    helper so its totals are commensurable with the analytic reports below."""
+    return payload_bytes(nnz, n_coords, with_bitmap)
+
+
+def edge_message_bytes(
+    adjacency: np.ndarray,
+    nnz_per_client: list[int],
+    n_coords: int = 0,
+    with_bitmap: bool = False,
+) -> np.ndarray:
+    """Per-edge message sizes: ``E[i, j]`` = bytes of j's model on the j->i
+    edge (0 off-edge and on the diagonal).  ``decentralized_comm`` and the
+    event simulator both derive their byte counts from this matrix, which is
+    what makes "simulated bytes-on-wire == accounting totals" testable."""
+    a = adjacency.astype(float).copy()
+    np.fill_diagonal(a, 0.0)
+    per_sender = np.asarray(
+        [message_bytes(v, n_coords, with_bitmap) for v in nnz_per_client])
+    return (a > 0) * per_sender[None, :]
+
+
 def decentralized_comm(
     adjacency: np.ndarray,
     nnz_per_client: list[int],
@@ -61,26 +85,12 @@ def decentralized_comm(
     adjacency[k, j] = 1 iff k receives j's model; sender j uploads its own
     nnz_j values once per receiving edge.
     """
-    k = adjacency.shape[0]
-    a = adjacency.copy().astype(float)
-    np.fill_diagonal(a, 0.0)
-    up = np.zeros(k)
-    down = np.zeros(k)
-    up_bm = np.zeros(k)
-    down_bm = np.zeros(k)
-    for j in range(k):
-        receivers = a[:, j].sum()
-        up[j] = receivers * payload_bytes(nnz_per_client[j])
-        up_bm[j] = receivers * payload_bytes(nnz_per_client[j], n_coords, True)
-    for i in range(k):
-        down[i] = sum(
-            payload_bytes(nnz_per_client[j]) for j in range(k) if a[i, j] > 0
-        )
-        down_bm[i] = sum(
-            payload_bytes(nnz_per_client[j], n_coords, True)
-            for j in range(k)
-            if a[i, j] > 0
-        )
+    e = edge_message_bytes(adjacency, nnz_per_client)
+    e_bm = edge_message_bytes(adjacency, nnz_per_client, n_coords, True)
+    up = e.sum(axis=0)
+    down = e.sum(axis=1)
+    up_bm = e_bm.sum(axis=0)
+    down_bm = e_bm.sum(axis=1)
     per_node = np.maximum(up, down)  # busiest direction, matching the paper
     per_node_bm = np.maximum(up_bm, down_bm)
     total = up.sum()

@@ -53,6 +53,7 @@ class DPSGDStrategy(StrategyBase):
     ``param_fraction`` mask is static and re-derived on resume."""
 
     vmap_capable = True
+    decentralized = True
 
     def __init__(self, finetune: bool = False, param_fraction: float = 1.0):
         self.finetune = finetune

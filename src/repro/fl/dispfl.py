@@ -32,6 +32,7 @@ class DisPFLStrategy(StrategyBase):
     densities are static given (cfg, model) and live on ``self``."""
 
     vmap_capable = True
+    decentralized = True
 
     def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
         super().init_state(task, clients, cfg)

@@ -59,7 +59,7 @@ from repro.fl.base import (
 )
 from repro.models.common import softmax_xent
 from repro.optim import SGDConfig, masked_sgd_step, sgd_step
-from repro.utils.tree import tree_index, tree_size, tree_stack
+from repro.utils.tree import tree_index, tree_nnz, tree_size, tree_stack
 
 PyTree = Any
 
@@ -134,6 +134,10 @@ class StrategyBase:
     name: str = "strategy"
     #: engine may execute the local phase as vmap-over-clients when True
     vmap_capable: bool = False
+    #: True iff ``mix`` communicates peer-to-peer over ``ctx.adjacency`` —
+    #: the contract the network simulator (repro.sim) measures; server-based
+    #: and local-only strategies leave this False
+    decentralized: bool = False
 
     # -- lifecycle ---------------------------------------------------------
     def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
@@ -185,6 +189,34 @@ class StrategyBase:
 
     def set_local(self, state: dict, k: int, params: PyTree) -> None:
         state["params"][k] = params
+
+    def set_local_mask(self, state: dict, k: int, mask: PyTree) -> None:
+        if mask is not None and "masks" in state:
+            state["masks"][k] = mask
+
+    # -- per-message payload (used by repro.sim for bytes-on-wire) ---------
+    def message_nnz(self, state: dict, k: int) -> int:
+        """Values client k actually puts on the wire: its mask's nnz, or the
+        full coordinate count for dense strategies."""
+        mask = self.local_mask(state, k)
+        if mask is not None:
+            return tree_nnz(mask)
+        return tree_size(self.local_params(state, k))
+
+    def message_coords(self, state: dict, k: int) -> int:
+        return tree_size(self.local_params(state, k))
+
+    def snapshot_message(self, state: dict, k: int) -> dict:
+        """Immutable snapshot of what k would transmit right now (jax arrays
+        are immutable, so holding references is safe)."""
+        return {"params": self.local_params(state, k),
+                "mask": self.local_mask(state, k)}
+
+    def install_message(self, state: dict, k: int, msg: dict) -> None:
+        """Write a received message into slot k (the simulator swaps these in
+        temporarily so ``mix`` sees arrived — possibly stale — models)."""
+        self.set_local(state, k, msg["params"])
+        self.set_local_mask(state, k, msg["mask"])
 
 
 # ---------------------------------------------------------------------------
@@ -425,57 +457,78 @@ class RoundEngine:
         return self
 
     # -- the round loop ----------------------------------------------------
-    def _make_ctx(self, t: int) -> RoundCtx:
+    def _make_ctx(self, t: int, alive: Optional[np.ndarray] = None) -> RoundCtx:
         cfg = self.cfg
         return RoundCtx(
             t=t, cfg=cfg, task=self.task, clients=self.clients,
             lr=cfg.lr_at(t),
             prune_rate=cosine_prune_rate(cfg.alpha0, t, cfg.rounds),
             adjacency=make_adjacency(cfg.topology, len(self.clients), t,
-                                     cfg.degree, cfg.seed, cfg.drop_prob))
+                                     cfg.degree, cfg.seed, cfg.drop_prob,
+                                     alive=alive))
 
-    def rounds(self) -> Iterator[RoundMetrics]:
+    # hooks for subclasses (the event simulator times each round without
+    # perturbing the reference semantics below)
+    def _pre_round(self, ctx: RoundCtx) -> None:
+        """Called after the ctx is built, before any hook runs."""
+
+    def _finish_metrics(self, ctx: RoundCtx, metrics: RoundMetrics) -> RoundMetrics:
+        """Last chance to decorate the round's metrics before callbacks."""
+        return metrics
+
+    def run_local_phase(self, ctx: RoundCtx, active: Sequence[int]) -> None:
+        """Execute the local phase for ``active`` clients — the reusable unit
+        the simulator invokes per client (``active=[k]``) or per round."""
+        active = list(active)
+        if self._use_vmap(ctx, active):
+            self._vmap_local_phase(ctx, active)
+        else:
+            for k in active:
+                self.strategy.local_update(self.state, k, ctx)
+
+    def _run_one_round(self, t: int) -> RoundMetrics:
         cfg = self.cfg
         strat = self.strategy
-        for t in range(self._next_round, cfg.rounds):
-            t0 = time.perf_counter()
-            ctx = self._make_ctx(t)
-            strat.mix(self.state, ctx)
-            active = list(strat.active_clients(self.state, ctx))
-            if self._use_vmap(ctx, active):
-                self._vmap_local_phase(ctx, active)
-            else:
-                for k in active:
-                    strat.local_update(self.state, k, ctx)
-            for k in active:
-                strat.evolve(self.state, k, ctx)
-            strat.post_round(self.state, ctx)
+        t0 = time.perf_counter()
+        ctx = self._make_ctx(t)
+        self._pre_round(ctx)
+        strat.mix(self.state, ctx)
+        active = list(strat.active_clients(self.state, ctx))
+        self.run_local_phase(ctx, active)
+        for k in active:
+            strat.evolve(self.state, k, ctx)
+        strat.post_round(self.state, ctx)
 
-            comm = strat.round_comm(self.state, ctx)
-            flops = strat.round_flops(self.state, ctx)
-            for key in self._comm:
-                self._comm[key].append(float(getattr(comm, key)))
-            for key in self._flops:
-                self._flops[key].append(float(getattr(flops, key)))
+        comm = strat.round_comm(self.state, ctx)
+        flops = strat.round_flops(self.state, ctx)
+        for key in self._comm:
+            self._comm[key].append(float(getattr(comm, key)))
+        for key in self._flops:
+            self._flops[key].append(float(getattr(flops, key)))
 
-            acc_mean = acc_std = None
-            if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-                accs = evaluate_clients(
-                    self.task, strat.eval_params(self.state, ctx), self.clients)
-                acc_mean = float(np.mean(accs))
-                acc_std = float(np.std(accs))
-                self._acc_history.append(acc_mean)
-                self._acc_stds.append(acc_std)
-                self._eval_rounds.append(t)
+        acc_mean = acc_std = None
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            accs = evaluate_clients(
+                self.task, strat.eval_params(self.state, ctx), self.clients)
+            acc_mean = float(np.mean(accs))
+            acc_std = float(np.std(accs))
+            self._acc_history.append(acc_mean)
+            self._acc_stds.append(acc_std)
+            self._eval_rounds.append(t)
 
-            self._next_round = t + 1
-            metrics = RoundMetrics(
-                round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
-                comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
-                flops_round=flops.per_round_flops,
-                cum_flops=float(np.sum(self._flops["per_round_flops"])),
-                acc_mean=acc_mean, acc_std=acc_std,
-                wall_s=time.perf_counter() - t0)
+        self._next_round = t + 1
+        metrics = RoundMetrics(
+            round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
+            comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
+            flops_round=flops.per_round_flops,
+            cum_flops=float(np.sum(self._flops["per_round_flops"])),
+            acc_mean=acc_mean, acc_std=acc_std,
+            wall_s=time.perf_counter() - t0)
+        return self._finish_metrics(ctx, metrics)
+
+    def rounds(self) -> Iterator[RoundMetrics]:
+        for t in range(self._next_round, self.cfg.rounds):
+            metrics = self._run_one_round(t)
             for cb in self.callbacks:
                 cb.on_round_end(self, metrics)
             yield metrics
@@ -532,9 +585,8 @@ class RoundEngine:
         bss = {min(cfg.batch_size, n) for n in ns}
         if len(bss) != 1:
             return False, "clients disagree on effective batch size"
-        bs = next(iter(bss))
-        if len({-(-n // bs) for n in ns}) != 1:
-            return False, "clients disagree on steps per epoch"
+        # ragged step counts are fine: the stacked phase pads every client to
+        # the max step count and masks the padded updates (no-op steps)
         return True, ""
 
     def _vmapped_fn(self, use_mask: bool) -> Callable:
@@ -550,25 +602,28 @@ class RoundEngine:
 
         grad = jax.grad(loss)
 
-        def per_client(p, m, bx, by, lr):
-            def body(w, xy):
-                x, y = xy
+        def per_client(p, m, bx, by, live, lr):
+            def body(w, xyl):
+                x, y, lv = xyl
                 g = grad(w, x, y)
                 if use_mask:
-                    w, _ = masked_sgd_step(w, g, m, {}, opt, lr)
+                    w2, _ = masked_sgd_step(w, g, m, {}, opt, lr)
                 else:
-                    w, _ = sgd_step(w, g, {}, opt, lr)
+                    w2, _ = sgd_step(w, g, {}, opt, lr)
+                # padded steps (ragged per-client schedules) are no-ops;
+                # jnp.where keeps live steps bit-identical to the plain step
+                w = jax.tree.map(lambda o, n: jnp.where(lv, n, o), w, w2)
                 return w, None
 
-            p, _ = jax.lax.scan(body, p, (bx, by))
+            p, _ = jax.lax.scan(body, p, (bx, by, live))
             return p
 
         if use_mask:
-            fn = jax.jit(jax.vmap(per_client, in_axes=(0, 0, 0, 0, None)))
+            fn = jax.jit(jax.vmap(per_client, in_axes=(0, 0, 0, 0, 0, None)))
         else:
             fn = jax.jit(jax.vmap(
-                lambda p, bx, by, lr: per_client(p, None, bx, by, lr),
-                in_axes=(0, 0, 0, None)))
+                lambda p, bx, by, live, lr: per_client(p, None, bx, by, live, lr),
+                in_axes=(0, 0, 0, 0, None)))
         self._vmap_fns[use_mask] = fn
         return fn
 
@@ -576,19 +631,29 @@ class RoundEngine:
         strat = self.strategy
         state = self.state
         epochs = strat.local_epochs(state, ctx)
-        bs = min(self.cfg.batch_size, self.clients[active[0]].n_train)
-        xb, yb = [], []
+        bs = min(self.cfg.batch_size,
+                 min(self.clients[k].n_train for k in active))
+        orders = []
         for k in active:
             # identical draws to the per-client loop: one permutation per
             # epoch from the client's (seed, round, k) generator
             rng = ctx.client_rng(k)
-            c = self.clients[k]
-            order = np.concatenate(
-                [_pad_order(c.n_train, bs, rng) for _ in range(epochs)])
+            orders.append(np.concatenate(
+                [_pad_order(self.clients[k].n_train, bs, rng)
+                 for _ in range(epochs)]))
+        # ragged schedules: pad every client to the max step count with
+        # recycled batches, masked out in the scan (live=False -> no-op step)
+        s_max = max(len(o) // bs for o in orders)
+        xb, yb, live = [], [], []
+        for k, order in zip(active, orders):
             steps = len(order) // bs
-            xb.append(c.train_x[order].reshape(
-                (steps, bs) + c.train_x.shape[1:]))
-            yb.append(c.train_y[order].reshape(steps, bs))
+            c = self.clients[k]
+            padded = np.resize(order, s_max * bs)
+            xb.append(c.train_x[padded].reshape(
+                (s_max, bs) + c.train_x.shape[1:]))
+            yb.append(c.train_y[padded].reshape(s_max, bs))
+            live.append(np.arange(s_max) < steps)
+        live = jnp.asarray(np.stack(live))
         stacked = tree_stack([strat.local_params(state, k) for k in active])
         masks = [strat.local_mask(state, k) for k in active]
         use_mask = masks[0] is not None
@@ -596,11 +661,11 @@ class RoundEngine:
         if use_mask:
             new = self._vmapped_fn(True)(
                 stacked, tree_stack(masks),
-                jnp.asarray(np.stack(xb)), jnp.asarray(np.stack(yb)), lr)
+                jnp.asarray(np.stack(xb)), jnp.asarray(np.stack(yb)), live, lr)
         else:
             new = self._vmapped_fn(False)(
                 stacked, jnp.asarray(np.stack(xb)), jnp.asarray(np.stack(yb)),
-                lr)
+                live, lr)
         for i, k in enumerate(active):
             strat.set_local(state, k, tree_index(new, i))
 

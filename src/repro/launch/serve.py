@@ -2,13 +2,18 @@
 masked models (the serving counterpart of DisPFL — each request is routed to
 its owner's personalized sparse model).
 
+Metrics stream live as JSON lines (one object per ``--metrics-every`` decode
+steps, plus a final summary line) through ``repro.sim.report.MetricsStream``
+— the same streaming protocol the round engine and network simulator use —
+instead of a single end-of-run dump.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
-        --clients 4 --batch 2 --prompt-len 16 --gen 16
+        --clients 4 --batch 2 --prompt-len 16 --gen 16 \
+        --metrics-jsonl serve_metrics.jsonl
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
@@ -23,6 +28,11 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-every", type=int, default=4,
+                    dest="metrics_every",
+                    help="emit a live metrics line every N decode steps")
+    ap.add_argument("--metrics-jsonl", default="-", dest="metrics_jsonl",
+                    help="stream JSON lines here ('-': stdout)")
     args = ap.parse_args()
 
     import jax
@@ -75,10 +85,16 @@ def main() -> None:
         nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
         return nxt, cache
 
+    from repro.sim.report import MetricsStream
+
+    stream = MetricsStream(args.metrics_jsonl)
     t0 = time.time()
     logits, cache = prefill(sp, prompts, cache, extra)
     nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
     t_prefill = time.time() - t0
+    stream.emit({"event": "prefill", "arch": cfg.name, "clients": k,
+                 "batch_per_client": b, "prompt_len": s0,
+                 "prefill_s": round(t_prefill, 3)})
 
     out_tokens = [nxt]
     t0 = time.time()
@@ -86,10 +102,19 @@ def main() -> None:
         pos = jnp.full((k,), s0 + i, jnp.int32)
         nxt, cache = decode(sp, nxt[:, :, None], pos, cache)
         out_tokens.append(nxt)
+        step = i + 1
+        if step % args.metrics_every == 0 or step == args.gen - 1:
+            elapsed = time.time() - t0
+            stream.emit({
+                "event": "decode", "step": step,
+                "tokens_out": k * b * step,
+                "elapsed_s": round(elapsed, 3),
+                "tok_per_s": round(k * b * step / max(elapsed, 1e-9), 1)})
     t_decode = time.time() - t0
 
     gen = np.stack([np.asarray(t) for t in out_tokens], axis=-1)  # (K, B, gen)
-    report = {
+    stream.emit({
+        "event": "summary",
         "arch": cfg.name,
         "clients": k,
         "batch_per_client": b,
@@ -97,8 +122,8 @@ def main() -> None:
         "decode_s": round(t_decode, 2),
         "tok_per_s": round(k * b * (args.gen - 1) / max(t_decode, 1e-9), 1),
         "sample_generation_client0": gen[0, 0].tolist(),
-    }
-    print(json.dumps(report, indent=2))
+    })
+    stream.close()
 
 
 if __name__ == "__main__":

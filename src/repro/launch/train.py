@@ -63,8 +63,33 @@ def run_simulate(args) -> dict:
                                       every=args.checkpoint_every))
     if args.target > 0:
         callbacks.append(EarlyStopAtTarget(args.target))
-    engine = RoundEngine(make_strategy(args.strategy), task, clients, cfg,
-                         callbacks=callbacks, local_exec=args.local_exec)
+    if args.sim:
+        from repro.sim import (
+            AlwaysUp,
+            BernoulliAvailability,
+            LinkModel,
+            SimEngine,
+            hetero_speeds,
+        )
+        links = (LinkModel.skewed(args.clients, args.bandwidth_mbps,
+                                  args.bandwidth_skew,
+                                  latency_ms=args.latency_ms, seed=args.seed)
+                 if args.bandwidth_skew > 1.0 else
+                 LinkModel.uniform(args.clients, args.bandwidth_mbps,
+                                   args.latency_ms))
+        avail = (BernoulliAvailability(args.clients, args.drop_prob, args.seed)
+                 if args.drop_prob > 0 else AlwaysUp(args.clients))
+        speeds = (hetero_speeds(args.clients, seed=args.seed)
+                  if args.compute_hetero else None)
+        engine = SimEngine(
+            make_strategy(args.strategy), task, clients, cfg,
+            callbacks=callbacks, local_exec=args.local_exec,
+            mode="async" if args.sim_async else "sync",
+            staleness=args.staleness, links=links, availability=avail,
+            round_s=args.round_s, compute_speeds=speeds)
+    else:
+        engine = RoundEngine(make_strategy(args.strategy), task, clients, cfg,
+                             callbacks=callbacks, local_exec=args.local_exec)
     if args.resume:
         engine.restore(args.resume)
         print(f"resumed from {args.resume} at round {engine._next_round}")
@@ -72,10 +97,12 @@ def run_simulate(args) -> dict:
     t0 = time.time()
     for m in engine.rounds():
         if m.acc_mean is not None:
+            sim_note = (f" t_sim={m.sim_time_s:.1f}s"
+                        if hasattr(m, "sim_time_s") else "")
             print(f"[round {m.round + 1}/{cfg.rounds}] "
                   f"acc={m.acc_mean:.3f}±{m.acc_std:.3f} "
                   f"comm={m.comm_busiest_mb:.2f}MB lr={m.lr:.4f} "
-                  f"({m.wall_s:.1f}s)")
+                  f"({m.wall_s:.1f}s){sim_note}")
     res = engine.result()
     out = {
         "strategy": args.strategy, "partition": args.partition,
@@ -83,6 +110,9 @@ def run_simulate(args) -> dict:
         "comm": res.comm_rows, "flops": res.flops_rows,
         "wall_s": round(time.time() - t0, 1),
     }
+    if args.sim:
+        targets = (args.target,) if args.target > 0 else ()
+        out["sim"] = engine.report(targets=targets).row()
     print(json.dumps(out, indent=2))
     if args.save:
         save_clients(args.save, [{"final_acc": np.asarray(a)}
@@ -225,6 +255,28 @@ def main() -> None:
                      help="restore engine state from this .npz and continue")
     sim.add_argument("--target", type=float, default=0.0,
                      help="early-stop once mean personalized acc >= target")
+    # event-driven network simulation (repro.sim)
+    sim.add_argument("--sim", action="store_true",
+                     help="run through the event-driven network simulator")
+    sim.add_argument("--async", dest="sim_async", action="store_true",
+                     help="asynchronous staleness-bounded gossip (default: "
+                          "synchronous barrier, bit-identical to the engine)")
+    sim.add_argument("--staleness", type=int, default=None,
+                     help="max rounds any client may run ahead "
+                          "(-1: unbounded; default 2)")
+    sim.add_argument("--bandwidth-mbps", type=float, default=None,
+                     dest="bandwidth_mbps", help="default 100")
+    sim.add_argument("--bandwidth-skew", type=float, default=None,
+                     dest="bandwidth_skew",
+                     help=">1: half the clients sit behind skew-x slower links")
+    sim.add_argument("--latency-ms", type=float, default=None,
+                     dest="latency_ms", help="default 10")
+    sim.add_argument("--compute-hetero", action="store_true",
+                     dest="compute_hetero",
+                     help="0.2x..1.0x per-client compute speed multipliers")
+    sim.add_argument("--round-s", type=float, default=None, dest="round_s",
+                     help="virtual seconds a full-speed client spends per "
+                          "round (default 1.0)")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", default="qwen3-8b")
@@ -243,6 +295,32 @@ def main() -> None:
 
     args = ap.parse_args()
     if args.mode == "simulate":
+        if not args.sim:
+            sim_only = {"--async": args.sim_async,
+                        "--staleness": args.staleness is not None,
+                        "--bandwidth-mbps": args.bandwidth_mbps is not None,
+                        "--bandwidth-skew": args.bandwidth_skew is not None,
+                        "--latency-ms": args.latency_ms is not None,
+                        "--compute-hetero": args.compute_hetero,
+                        "--round-s": args.round_s is not None}
+            used = [f for f, on in sim_only.items() if on]
+            if used:
+                ap.error(f"{', '.join(used)} require(s) --sim")
+        elif args.resume:
+            ap.error("--sim cannot --resume: the virtual timeline is not "
+                     "checkpointed (rerun the simulation instead)")
+        # resolve sim defaults after the guard above (`is None`, never `or`:
+        # an explicit 0 must reach the models' own validation, not be
+        # silently replaced by the default)
+        args.staleness = 2 if args.staleness is None else args.staleness
+        args.bandwidth_mbps = (100.0 if args.bandwidth_mbps is None
+                               else args.bandwidth_mbps)
+        args.bandwidth_skew = (1.0 if args.bandwidth_skew is None
+                               else args.bandwidth_skew)
+        args.latency_ms = 10.0 if args.latency_ms is None else args.latency_ms
+        args.round_s = 1.0 if args.round_s is None else args.round_s
+        if args.sim and args.bandwidth_skew < 1.0:
+            ap.error("--bandwidth-skew must be >= 1 (1 = uniform links)")
         run_simulate(args)
     else:
         run_lm(args)

@@ -1,0 +1,39 @@
+"""repro.sim — event-driven asynchronous P2P network simulator.
+
+Turns the round-loop reproduction into a system that can answer deployment
+questions: how long does decentralized sparse training take on *real* links,
+what does the busiest node actually upload/download, and when does
+asynchronous gossip beat the synchronous barrier?
+
+Modules
+-------
+``events``        event queue, virtual clock, per-client compute speeds
+``links``         per-edge bandwidth/latency models + measured bytes-on-wire
+``availability``  Bernoulli / trace-driven client up-down schedules (shared
+                  with the fig-6 dropping experiment)
+``async_engine``  ``SimEngine`` — drives the existing Strategy hooks in a
+                  synchronous (bit-identical to ``RoundEngine``) or
+                  staleness-bounded asynchronous regime
+``report``        wall-clock-to-target, busiest-node timelines, per-link
+                  utilization, JSON-lines streaming
+
+See the ``async_engine`` module docstring for a worked example, and
+``examples/async_gossip.py`` for a runnable one.
+"""
+from repro.sim.availability import (  # noqa: F401
+    AlwaysUp,
+    Availability,
+    BernoulliAvailability,
+    TraceAvailability,
+    dropping_trace,
+)
+from repro.sim.events import (  # noqa: F401
+    ComputeModel,
+    Event,
+    EventQueue,
+    VirtualClock,
+    hetero_speeds,
+)
+from repro.sim.links import LinkModel, LinkStats  # noqa: F401
+from repro.sim.async_engine import SimEngine, SimRoundMetrics  # noqa: F401
+from repro.sim.report import MetricsStream, SimReport, build_report  # noqa: F401

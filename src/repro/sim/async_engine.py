@@ -1,0 +1,482 @@
+"""Event-driven simulator for decentralized sparse training.
+
+``SimEngine`` drives the *existing* ``Strategy`` hook classes (no strategy
+changes) through a discrete-event timeline with per-edge link models
+(``sim.links``), per-client compute speeds (``sim.events.ComputeModel``) and
+client up/down schedules (``sim.availability``).  Two modes:
+
+* ``mode="sync"`` — the synchronous barrier protocol.  State evolution is
+  *bit-identical* to ``RoundEngine`` (it runs the exact same round body via
+  the engine's ``_run_one_round``); the simulator only adds a virtual
+  timeline on top: per-round duration = slowest client's compute + its
+  slowest transfer, every mix-phase message measured on the wire from the
+  sender's current mask nnz.
+
+* ``mode="async"`` — staleness-aware asynchronous push-gossip.  Each client
+  runs its own local-round clock: wake, mix whatever neighbor models have
+  *arrived* by now, train for ``flops / (flops_per_s * speed_k)`` virtual
+  seconds, push the updated sparse model to ``degree`` sampled receivers
+  (transfer time from the link model, payload from the sender's nnz), sleep
+  until the sends are scheduled, repeat.  ``staleness >= 0`` enforces the
+  bounded-staleness (stale-synchronous-parallel) protocol: no client may run
+  more than ``staleness`` rounds ahead of the slowest, and messages older
+  than the bound are not mixed; ``staleness < 0`` is fully asynchronous.
+  ``staleness=0`` degenerates to a barrier.
+
+Worked example::
+
+    from repro.fl import FLConfig, make_cnn_task, make_strategy
+    from repro.data import build_federated_image_task
+    from repro.sim import ComputeModel, LinkModel, SimEngine
+
+    clients, _ = build_federated_image_task(0, n_clients=8)
+    task = make_cnn_task("smallcnn")
+    cfg = FLConfig(n_clients=8, rounds=20, degree=3)
+    eng = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                    mode="async", staleness=2,
+                    links=LinkModel.skewed(8, mbps=100, skew=10),
+                    compute=ComputeModel.heterogeneous(8))
+    for m in eng.rounds():          # SimRoundMetrics: acc + virtual time
+        print(m.round, m.acc_mean, m.sim_time_s)
+    print(eng.report().to_dict())   # wall-clock-to-target, busiest node, ...
+
+Determinism: all training randomness is derived per (seed, local round,
+client) exactly as in ``RoundEngine``; event ties break on insertion order;
+there is no wall-clock anywhere in the virtual timeline — a simulation is a
+pure function of (strategy, data, cfg, links, compute, availability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.accounting import edge_message_bytes, message_bytes
+from repro.core.evolve import cosine_prune_rate
+from repro.core.topology import directed_out_neighbors, make_adjacency
+from repro.fl.base import evaluate_clients
+from repro.fl.engine import (
+    RoundCtx,
+    RoundEngine,
+    RoundMetrics,
+    StrategyBase,
+)
+from repro.sim.availability import AlwaysUp, Availability
+from repro.sim.events import (
+    ARRIVAL,
+    DONE,
+    WAKE,
+    ComputeModel,
+    EventQueue,
+    VirtualClock,
+)
+from repro.sim.links import MB, LinkModel, LinkStats
+from repro.sim.report import SimReport, build_report
+
+
+@dataclasses.dataclass
+class SimRoundMetrics(RoundMetrics):
+    """RoundMetrics + the virtual timeline (JSONL-streams through the same
+    callback protocol — ``to_dict`` inherits)."""
+    sim_time_s: float = 0.0          # virtual clock after this round
+    sim_round_s: float = 0.0         # this round's virtual duration
+    measured_total_mb: float = 0.0   # cumulative measured bytes-on-wire
+    busiest_up_mb: float = 0.0       # cumulative, busiest node convention
+    busiest_down_mb: float = 0.0
+    min_round: int = 0               # async: slowest / fastest client rounds
+    max_round: int = 0
+
+
+@dataclasses.dataclass
+class _Message:
+    """A published model.  ``version`` counts completed rounds: the model a
+    sender publishes after finishing round t has version t+1, so a receiver
+    at round t mixing a version-t model sees lag 0 — exactly the freshness
+    the synchronous protocol provides (mix at round t uses end-of-round-t-1
+    models).  The staleness bound filters on this lag."""
+    version: int
+    payload: dict       # StrategyBase.snapshot_message
+
+
+class SimEngine(RoundEngine):
+    """Discrete-event wrapper around the Strategy hook protocol."""
+
+    def __init__(self, strategy: StrategyBase, task, clients, cfg,
+                 callbacks: Sequence = (), local_exec: str = "auto",
+                 mode: str = "sync", staleness: int = 0,
+                 links: Optional[LinkModel] = None,
+                 compute: Optional[ComputeModel] = None,
+                 availability: Optional[Availability] = None,
+                 round_s: Optional[float] = None,
+                 compute_speeds: Optional[np.ndarray] = None,
+                 max_down_retries: int = 100):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be sync|async, got {mode}")
+        super().__init__(strategy, task, clients, cfg,
+                         callbacks=callbacks, local_exec=local_exec)
+        n = len(clients)
+        self.mode = mode
+        self.staleness = int(staleness)
+        #: async: consecutive down-slot retries before a client is declared
+        #: dead (stops participating and no longer bounds SSP progress)
+        self.max_down_retries = int(max_down_retries)
+        self.links = links or LinkModel.uniform(n)
+        self.availability = availability or AlwaysUp(n)
+        if compute is None:
+            if round_s is not None:
+                # anchor the timescale: a speed-1.0 client does one local
+                # round (at this strategy's analytic FLOPs) in round_s
+                compute = ComputeModel.paced(
+                    n, self.round_flops_estimate(), round_s,
+                    speeds=compute_speeds)
+            elif compute_speeds is not None:
+                compute = ComputeModel(speeds=compute_speeds)
+            else:
+                compute = ComputeModel.uniform(n)
+        self.compute = compute
+        self.clock = VirtualClock()
+        self.stats = LinkStats(n)
+        self.acc_trace: list[tuple[float, float]] = []   # (virtual s, acc)
+        # async invariant observability (tested in tests/test_sim.py)
+        self.observed_spread = 0          # max t_k - min(t) at execution
+        self.observed_mix_lag = 0         # max version lag actually mixed
+        self.mixed_messages = 0           # neighbor models mixed over the run
+        self._pending_edges = None        # sync: this round's message sizes
+
+    # ------------------------------------------------------------------
+    # shared
+    # ------------------------------------------------------------------
+    @property
+    def sim_time(self) -> float:
+        return self.clock.now
+
+    def round_flops_estimate(self) -> float:
+        """Analytic per-client FLOPs of one local round (round 0)."""
+        ctx = self._make_ctx(0)
+        return float(self.strategy.round_flops(self.state, ctx).per_round_flops)
+
+    def restore(self, path: str):
+        # engine checkpoints carry no virtual clock / link stats / accuracy
+        # trace, so a resumed simulation would silently report wrong
+        # deployment numbers — refuse rather than mislead
+        raise NotImplementedError(
+            "SimEngine does not support checkpoint resume (the virtual "
+            "timeline is not checkpointed); rerun the simulation or resume "
+            "with RoundEngine")
+
+    def report(self, targets: Sequence[float] = ()) -> SimReport:
+        return build_report(self.mode, self.stats, self.acc_trace,
+                            self.clock.now, targets)
+
+    def _make_ctx(self, t: int, alive: Optional[np.ndarray] = None) -> RoundCtx:
+        if alive is None and not self.availability.always_up:
+            alive = self.availability.alive(t)
+        return super()._make_ctx(t, alive=alive)
+
+    # ------------------------------------------------------------------
+    # sync mode: RoundEngine semantics + a virtual timeline
+    # ------------------------------------------------------------------
+    def _pre_round(self, ctx: RoundCtx) -> None:
+        # capture what the mix phase transmits: the pre-mix masks' nnz on the
+        # current adjacency (measured, not assumed).  Strategies that don't
+        # gossip over the adjacency (server-based / local-only) move no
+        # P2P bytes, so their timeline is compute-only
+        if not self.strategy.decentralized:
+            self._pending_edges = None
+            return
+        strat, state = self.strategy, self.state
+        nnz = [strat.message_nnz(state, k) for k in range(len(self.clients))]
+        coords = strat.message_coords(state, 0)
+        self._pending_edges = (
+            edge_message_bytes(ctx.adjacency, nnz),
+            edge_message_bytes(ctx.adjacency, nnz, coords, with_bitmap=True))
+
+    def _finish_metrics(self, ctx: RoundCtx, metrics: RoundMetrics) -> RoundMetrics:
+        edges = self._pending_edges
+        self._pending_edges = None
+        t0 = self.clock.now
+        compute_s = np.array([
+            self.compute.local_time(k, metrics.flops_round)
+            for k in range(len(self.clients))])
+        send_end = np.zeros(len(self.clients))
+        if edges is not None:
+            edges_v, edges_w = edges
+            for dst, src in zip(*np.nonzero(edges_v)):
+                start = t0 + compute_s[src]
+                end = start + self.links.transfer_time(
+                    edges_w[dst, src], src, dst)
+                self.stats.record(src, dst, edges_v[dst, src],
+                                  edges_w[dst, src], start, end)
+                send_end[src] = max(send_end[src], end - t0)
+        dur = float(np.maximum(compute_s, send_end).max()) if len(compute_s) else 0.0
+        self.clock.advance_to(t0 + dur)
+        if metrics.acc_mean is not None:
+            self.acc_trace.append((self.clock.now, metrics.acc_mean))
+        up, down = self.stats.up * MB, self.stats.down * MB
+        return SimRoundMetrics(
+            **dataclasses.asdict(metrics),
+            sim_time_s=self.clock.now, sim_round_s=dur,
+            measured_total_mb=self.stats.total_mb,
+            busiest_up_mb=float(up.max()), busiest_down_mb=float(down.max()),
+            min_round=ctx.t + 1, max_round=ctx.t + 1)
+
+    # ------------------------------------------------------------------
+    # async mode
+    # ------------------------------------------------------------------
+    def rounds(self):
+        if self.mode == "sync":
+            yield from super().rounds()
+            return
+        yield from self._async_rounds()
+
+    def _mix_one(self, k: int, senders: dict[int, _Message], ctx: RoundCtx) -> None:
+        """Run the strategy's ``mix`` from client k's local view.
+
+        Arrived neighbor snapshots are swapped into the state, ``mix`` runs
+        on an adjacency whose only non-identity row is k's, and everything
+        but k's mixed model is restored afterwards — so any Strategy's
+        communication rule works unmodified in the async regime.
+        """
+        if not senders:
+            # gossip self-mix is the identity (dispfl: re-masking an
+            # already-masked model; dpsgd: W[k,k]=1) — skip the O(K) mix
+            return
+        strat, state = self.strategy, self.state
+        saved_params = list(state["params"])
+        saved_masks = list(state["masks"]) if "masks" in state else None
+        for j, msg in senders.items():
+            strat.install_message(state, j, msg.payload)
+        strat.mix(state, ctx)
+        mixed_k = state["params"][k]
+        state["params"] = saved_params
+        state["params"][k] = mixed_k
+        if saved_masks is not None:
+            saved_masks[k] = state["masks"][k]
+            state["masks"] = saved_masks
+
+    def _async_rounds(self):
+        cfg = self.cfg
+        strat = self.strategy
+        n = len(self.clients)
+        if self._next_round != 0:
+            raise NotImplementedError(
+                "async simulation does not support checkpoint resume")
+        if not strat.decentralized:
+            # a non-gossip mix would read live peer state instead of what
+            # arrived over the simulated links — every reported number would
+            # be fiction, so refuse
+            raise ValueError(
+                f"async simulation requires a decentralized strategy whose "
+                f"mix gossips over ctx.adjacency; '{strat.name}' is not "
+                f"(strategy.decentralized is False)")
+        if not isinstance(self.state.get("params"), list):
+            raise ValueError(
+                f"async simulation requires per-client state['params'] lists "
+                f"(strategy '{strat.name}' has none)")
+
+        q = EventQueue()
+        inbox: list[dict[int, _Message]] = [dict() for _ in range(n)]
+        t_local = np.zeros(n, dtype=int)
+        down_count = np.zeros(n, dtype=int)    # total down slots (slot offset)
+        down_streak = np.zeros(n, dtype=int)   # consecutive down retries
+        waiting: set[int] = set()
+        done: set[int] = set()
+        dead: set[int] = set()
+        emitted = 0                      # global rounds yielded so far
+        self._stop = False
+        for k in range(n):
+            q.push(0.0, WAKE, k=k)
+
+        def live_floor() -> int:
+            """Slowest *participating* client's completed rounds — dead
+            clients (permanently unavailable) stop bounding progress.  With
+            nobody left alive no further progress is possible, so the floor
+            freezes at the rounds already emitted (the run ends partial
+            rather than fabricating untrained rounds)."""
+            alive_t = [int(t_local[i]) for i in range(n) if i not in dead]
+            return min(alive_t) if alive_t else emitted
+
+        def flops_at(t: int) -> float:
+            ctx = self._make_ctx(int(t))
+            return strat.round_flops(self.state, ctx).per_round_flops
+
+        prev_snap = self.stats.snapshot()
+
+        def emit_rounds():
+            """Yield one SimRoundMetrics per newly completed global round
+            (a round is complete once the slowest client passes it)."""
+            nonlocal emitted, prev_snap
+            floor = live_floor()
+            out = []
+            while emitted < floor:
+                t = emitted
+                ctx = self._make_ctx(t)
+                comm_sn = self.stats.snapshot()
+                win_up = comm_sn["up"] - prev_snap["up"]
+                win_down = comm_sn["down"] - prev_snap["down"]
+                win_up_w = comm_sn["up_wire"] - prev_snap["up_wire"]
+                win_down_w = comm_sn["down_wire"] - prev_snap["down_wire"]
+                prev_snap = comm_sn
+                busiest = float(np.maximum(win_up, win_down).max()) * MB
+                flops = strat.round_flops(self.state, ctx)
+                self._comm["busiest_mb"].append(busiest)
+                self._comm["avg_per_node_mb"].append(
+                    float(np.maximum(win_up, win_down).mean()) * MB)
+                self._comm["total_mb"].append(float(win_up.sum()) * MB)
+                self._comm["busiest_mb_with_bitmap"].append(
+                    float(np.maximum(win_up_w, win_down_w).max()) * MB)
+                for key in self._flops:
+                    self._flops[key].append(float(getattr(flops, key)))
+                acc_mean = acc_std = None
+                if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                    accs = evaluate_clients(
+                        self.task, strat.eval_params(self.state, ctx),
+                        self.clients)
+                    acc_mean = float(np.mean(accs))
+                    acc_std = float(np.std(accs))
+                    self._acc_history.append(acc_mean)
+                    self._acc_stds.append(acc_std)
+                    self._eval_rounds.append(t)
+                    self.acc_trace.append((self.clock.now, acc_mean))
+                up, down = self.stats.up * MB, self.stats.down * MB
+                out.append(SimRoundMetrics(
+                    round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
+                    comm_busiest_mb=busiest,
+                    comm_rows={"busiest_MB": round(busiest, 3)},
+                    flops_round=flops.per_round_flops,
+                    cum_flops=float(np.sum(self._flops["per_round_flops"])),
+                    acc_mean=acc_mean, acc_std=acc_std, wall_s=0.0,
+                    sim_time_s=self.clock.now, sim_round_s=0.0,
+                    measured_total_mb=self.stats.total_mb,
+                    busiest_up_mb=float(up.max()),
+                    busiest_down_mb=float(down.max()),
+                    min_round=int(t_local.min()),
+                    max_round=int(t_local.max())))
+                emitted += 1
+                self._next_round = emitted
+            return out
+
+        while q and len(done) < n and not self._stop:
+            ev = q.pop()
+            self.clock.advance_to(ev.time)
+            if ev.kind == ARRIVAL:
+                k, src = ev.data["k"], ev.data["src"]
+                msg = ev.data["msg"]
+                cur = inbox[k].get(src)
+                if cur is None or msg.version >= cur.version:
+                    inbox[k][src] = msg
+                if k in waiting:
+                    waiting.discard(k)
+                    q.push(ev.time, WAKE, k=k)
+                continue
+
+            if ev.kind == DONE:
+                # a client's round completes at its compute-finish time: only
+                # now does its local clock advance, unblocking SSP waiters
+                # and (possibly) completing a global round
+                k = ev.data["k"]
+                t_local[k] += 1
+                self._last_finish = max(getattr(self, "_last_finish", 0.0),
+                                        ev.time)
+                if t_local[k] >= cfg.rounds:
+                    done.add(k)
+                else:
+                    q.push(ev.time, WAKE, k=k)
+                if live_floor() > emitted:
+                    for w in sorted(waiting):
+                        q.push(ev.time, WAKE, k=w)
+                    waiting.clear()
+                    for m in emit_rounds():
+                        for cb in self.callbacks:
+                            cb.on_round_end(self, m)
+                        yield m
+                        if self._stop:
+                            break
+                continue
+
+            k = ev.data["k"]
+            if k in done:
+                continue
+            t_k = int(t_local[k])
+            # bounded staleness (SSP): never run more than `staleness` rounds
+            # ahead of the slowest participating client
+            spread = t_k - live_floor()
+            if self.staleness >= 0 and spread > self.staleness:
+                waiting.add(k)
+                continue
+            # availability: a down client retries one mean-round later
+            # against its next slot; after max_down_retries consecutive down
+            # slots it is declared dead so it cannot stall the whole network
+            if not self.availability.up(k, t_k + int(down_count[k])):
+                down_count[k] += 1
+                down_streak[k] += 1
+                if down_streak[k] > self.max_down_retries:
+                    dead.add(k)
+                    done.add(k)
+                    for w in sorted(waiting):
+                        q.push(ev.time, WAKE, k=w)
+                    waiting.clear()
+                    for m in emit_rounds():
+                        for cb in self.callbacks:
+                            cb.on_round_end(self, m)
+                        yield m
+                        if self._stop:
+                            break
+                    continue
+                retry = self.compute.mean_round_s(flops_at(t_k))
+                q.push(ev.time + max(retry, 1e-9), WAKE, k=k)
+                continue
+            down_streak[k] = 0
+            self.observed_spread = max(self.observed_spread, max(0, spread))
+
+            # 1. mix what has arrived (respecting the staleness bound)
+            senders = {
+                j: m for j, m in inbox[k].items()
+                if self.staleness < 0 or t_k - m.version <= self.staleness}
+            for m in senders.values():
+                self.observed_mix_lag = max(self.observed_mix_lag,
+                                            max(0, t_k - m.version))
+            self.mixed_messages += len(senders)
+            a = np.eye(n)
+            if senders:
+                a[k, list(senders)] = 1.0
+            ctx = RoundCtx(
+                t=t_k, cfg=cfg, task=self.task, clients=self.clients,
+                lr=cfg.lr_at(t_k),
+                prune_rate=cosine_prune_rate(cfg.alpha0, t_k, cfg.rounds),
+                adjacency=a)
+            self._mix_one(k, senders, ctx)
+
+            # 2. local phase + mask evolution (same hooks, same derived rng)
+            self.run_local_phase(ctx, [k])
+            strat.evolve(self.state, k, ctx)
+
+            # 3. compute time, then push to sampled receivers
+            flops = strat.round_flops(self.state, ctx).per_round_flops
+            finish = ev.time + self.compute.local_time(k, flops)
+            nnz = strat.message_nnz(self.state, k)
+            coords = strat.message_coords(self.state, k)
+            bytes_v = message_bytes(nnz)
+            bytes_w = message_bytes(nnz, coords, with_bitmap=True)
+            msg = _Message(version=t_k + 1,
+                           payload=strat.snapshot_message(self.state, k))
+            for j in directed_out_neighbors(n, k, t_k, cfg.degree, cfg.seed):
+                j = int(j)
+                arrive = finish + self.links.transfer_time(bytes_w, k, j)
+                self.stats.record(k, j, bytes_v, bytes_w, finish, arrive)
+                q.push(arrive, ARRIVAL, k=j, src=k, msg=msg)
+
+            # 4. the round completes (and the local clock advances) at the
+            # compute-finish time, handled by the DONE event above
+            q.push(finish, DONE, k=k)
+        # the run ends when the last client finishes its compute, even if
+        # some already-sent messages are still in flight
+        self.clock.advance_to(max(getattr(self, "_last_finish", 0.0),
+                                  self.clock.now))
+        for m in emit_rounds():
+            for cb in self.callbacks:
+                cb.on_round_end(self, m)
+            yield m
+        for cb in self.callbacks:
+            cb.on_run_end(self)

@@ -1,0 +1,152 @@
+"""Per-edge link models and measured bytes-on-wire.
+
+``LinkModel`` maps a message size to a transfer time per directed edge
+(latency + bytes / bandwidth).  ``LinkStats`` records every transfer the
+simulator actually performs — sender, receiver, payload bytes computed from
+the *sender's current mask nnz* via ``repro.core.accounting.message_bytes``
+— so busiest-node traffic and per-link utilization are measured quantities,
+not analytic assumptions.  On a static topology the measured totals are
+bit-commensurable with ``core.accounting.decentralized_comm`` (the property
+test in ``tests/test_sim.py`` asserts exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+MB = 1e-6  # decimal MB, matching the paper's tables
+
+
+class LinkModel:
+    """Directed per-edge bandwidth/latency: time = latency + bytes * 8 / bw."""
+
+    def __init__(self, bandwidth_mbps: np.ndarray | float,
+                 latency_s: np.ndarray | float = 0.01, n_clients: int = 0):
+        if np.isscalar(bandwidth_mbps):
+            bandwidth_mbps = np.full((n_clients, n_clients), float(bandwidth_mbps))
+        if np.isscalar(latency_s):
+            latency_s = np.full_like(np.asarray(bandwidth_mbps, float),
+                                     float(latency_s))
+        self.bw_mbps = np.asarray(bandwidth_mbps, dtype=float)
+        self.latency_s = np.asarray(latency_s, dtype=float)
+        if np.any(self.bw_mbps <= 0):
+            raise ValueError("bandwidth must be positive")
+
+    @classmethod
+    def uniform(cls, n_clients: int, mbps: float = 100.0,
+                latency_ms: float = 10.0) -> "LinkModel":
+        return cls(mbps, latency_ms / 1e3, n_clients)
+
+    @classmethod
+    def skewed(cls, n_clients: int, mbps: float = 100.0, skew: float = 10.0,
+               slow_frac: float = 0.5, latency_ms: float = 10.0,
+               seed: int = 0) -> "LinkModel":
+        """A ``slow_frac`` subset of clients sits behind ``skew``x slower
+        links (any edge touching a slow client): the bandwidth-heterogeneity
+        regime where async gossip should beat the synchronous barrier."""
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 314159]))
+        slow = rng.permutation(n_clients) < int(round(slow_frac * n_clients))
+        bw = np.full((n_clients, n_clients), mbps)
+        bw[slow, :] = mbps / skew
+        bw[:, slow] = mbps / skew
+        return cls(bw, latency_ms / 1e3)
+
+    def transfer_time(self, n_bytes: float, src: int, dst: int) -> float:
+        return float(self.latency_s[src, dst]
+                     + n_bytes * 8.0 / (self.bw_mbps[src, dst] * 1e6))
+
+
+@dataclasses.dataclass
+class Transfer:
+    t_start: float
+    t_end: float
+    src: int
+    dst: int
+    bytes_values: float     # 4B-per-value payload (the paper's headline unit)
+    bytes_wire: float       # payload + mask bitmap (what the link carries)
+
+
+class LinkStats:
+    """Accumulates every simulated transfer.
+
+    Totals use the paper's value-bytes convention (comparable to
+    ``decentralized_comm``); ``*_wire`` adds the mask bitmap.  ``transfers``
+    keeps the full timeline for per-link utilization and the busiest-node
+    upload/download trajectories in ``repro.sim.report``.
+    """
+
+    def __init__(self, n_clients: int):
+        self.n = n_clients
+        self.up = np.zeros(n_clients)        # value-bytes uploaded per node
+        self.down = np.zeros(n_clients)
+        self.up_wire = np.zeros(n_clients)
+        self.down_wire = np.zeros(n_clients)
+        self.edge_bytes = np.zeros((n_clients, n_clients))   # [dst, src]
+        self.edge_busy_s = np.zeros((n_clients, n_clients))
+        self.transfers: list[Transfer] = []
+
+    def record(self, src: int, dst: int, bytes_values: float,
+               bytes_wire: float, t_start: float, t_end: float) -> None:
+        self.up[src] += bytes_values
+        self.down[dst] += bytes_values
+        self.up_wire[src] += bytes_wire
+        self.down_wire[dst] += bytes_wire
+        self.edge_bytes[dst, src] += bytes_values
+        self.edge_busy_s[dst, src] += max(0.0, t_end - t_start)
+        self.transfers.append(Transfer(t_start, t_end, src, dst,
+                                       bytes_values, bytes_wire))
+
+    # -- aggregates --------------------------------------------------------
+    @property
+    def total_mb(self) -> float:
+        return float(self.up.sum()) * MB
+
+    @property
+    def total_wire_mb(self) -> float:
+        return float(self.up_wire.sum()) * MB
+
+    def per_node_mb(self) -> np.ndarray:
+        """Paper convention: each node's traffic is its busiest direction."""
+        return np.maximum(self.up, self.down) * MB
+
+    def busiest_node(self) -> tuple[int, float]:
+        per = self.per_node_mb()
+        k = int(np.argmax(per))
+        return k, float(per[k])
+
+    def snapshot(self) -> dict:
+        return {"up": self.up.copy(), "down": self.down.copy(),
+                "up_wire": self.up_wire.copy(),
+                "down_wire": self.down_wire.copy()}
+
+    def busiest_mb_until(self, t: float) -> float:
+        """Busiest node's value-MB counting only transfers finished by t."""
+        up = np.zeros(self.n)
+        down = np.zeros(self.n)
+        for tr in self.transfers:
+            if tr.t_end <= t:
+                up[tr.src] += tr.bytes_values
+                down[tr.dst] += tr.bytes_values
+        return float(np.maximum(up, down).max()) * MB
+
+    def node_timeline(self, k: int) -> list[tuple[float, float, float]]:
+        """(t, cumulative up MB, cumulative down MB) at each transfer end
+        involving node k — the busiest-node upload/download timeline."""
+        out, up, down = [], 0.0, 0.0
+        for tr in sorted(self.transfers, key=lambda r: (r.t_end, r.src, r.dst)):
+            if tr.src != k and tr.dst != k:
+                continue
+            if tr.src == k:
+                up += tr.bytes_values
+            if tr.dst == k:
+                down += tr.bytes_values
+            out.append((tr.t_end, up * MB, down * MB))
+        return out
+
+    def utilization(self, span_s: float) -> np.ndarray:
+        """Per-edge busy fraction over the run (capped at 1.0)."""
+        if span_s <= 0:
+            return np.zeros_like(self.edge_busy_s)
+        return np.minimum(self.edge_busy_s / span_s, 1.0)

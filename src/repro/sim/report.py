@@ -1,0 +1,130 @@
+"""Simulation reporting: deployment-facing numbers from measured transfers.
+
+``build_report`` turns a run's ``LinkStats`` + accuracy trace into the
+quantities the paper only gestures at: virtual wall-clock to a target
+accuracy, the busiest node's upload/download timeline, per-link utilization
+and total measured bytes-on-wire.  ``MetricsStream`` is the tiny JSON-lines
+emitter shared by the simulator CLI and ``launch/serve.py`` live metrics —
+one JSON object per line, streamed as the run progresses rather than dumped
+at the end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from typing import IO, Optional, Sequence
+
+import numpy as np
+
+from repro.sim.links import MB, LinkStats
+
+
+class MetricsStream:
+    """Append one JSON object per line to a file or stdout, flushing each
+    line so consumers see metrics live."""
+
+    def __init__(self, path: str = "-"):
+        self.path = path
+        self._fh: Optional[IO] = None
+
+    def _handle(self) -> IO:
+        if self._fh is None:
+            if self.path in ("-", ""):
+                self._fh = sys.stdout
+            else:
+                import os
+                d = os.path.dirname(os.path.abspath(self.path))
+                os.makedirs(d, exist_ok=True)
+                self._fh = open(self.path, "w")
+        return self._fh
+
+    def emit(self, record: dict) -> None:
+        fh = self._handle()
+        fh.write(json.dumps(record) + "\n")
+        fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None and self._fh is not sys.stdout:
+            self._fh.close()
+        self._fh = None
+
+
+@dataclasses.dataclass
+class SimReport:
+    mode: str
+    sim_wall_s: float                       # total virtual seconds
+    total_mb: float                         # measured, value-bytes
+    total_wire_mb: float                    # + mask bitmaps
+    busiest_node: int
+    busiest_node_mb: float                  # max(up, down) convention
+    busiest_up_mb: float
+    busiest_down_mb: float
+    time_to_target_s: dict                  # target acc -> virtual s (or -1)
+    busiest_mb_at_target: dict              # target acc -> busiest-node MB
+    link_utilization_mean: float            # over used edges
+    link_utilization_max: float
+    n_transfers: int
+    acc_trace: list                         # [(virtual s, acc), ...]
+    busiest_timeline: list                  # [(virtual s, up MB, down MB), ...]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["acc_trace"] = [(round(t, 3), round(a, 4)) for t, a in self.acc_trace]
+        d["busiest_timeline"] = [
+            (round(t, 3), round(u, 3), round(dn, 3))
+            for t, u, dn in self.busiest_timeline]
+        return d
+
+    def row(self) -> dict:
+        """Compact benchmark row (no timelines)."""
+        return {
+            "mode": self.mode,
+            "sim_wall_s": round(self.sim_wall_s, 2),
+            "busiest_MB": round(self.busiest_node_mb, 2),
+            "total_MB": round(self.total_mb, 2),
+            "time_to_target_s": {str(k): round(v, 2)
+                                 for k, v in self.time_to_target_s.items()},
+            "busiest_MB_at_target": {str(k): round(v, 2)
+                                     for k, v in self.busiest_mb_at_target.items()},
+            "link_util_mean": round(self.link_utilization_mean, 4),
+        }
+
+
+def time_to_target(acc_trace: Sequence[tuple[float, float]],
+                   target: float) -> float:
+    """First virtual time the accuracy trace reaches ``target`` (-1: never)."""
+    for t, acc in acc_trace:
+        if acc >= target:
+            return float(t)
+    return -1.0
+
+
+def build_report(mode: str, stats: LinkStats,
+                 acc_trace: Sequence[tuple[float, float]],
+                 sim_wall_s: float,
+                 targets: Sequence[float] = ()) -> SimReport:
+    node, busiest_mb = stats.busiest_node()
+    util = stats.utilization(sim_wall_s)
+    used = util[stats.edge_bytes > 0]
+    ttt, mb_at = {}, {}
+    for tgt in targets:
+        t_hit = time_to_target(acc_trace, tgt)
+        ttt[tgt] = t_hit
+        mb_at[tgt] = stats.busiest_mb_until(t_hit) if t_hit >= 0 else -1.0
+    return SimReport(
+        mode=mode,
+        sim_wall_s=float(sim_wall_s),
+        total_mb=stats.total_mb,
+        total_wire_mb=stats.total_wire_mb,
+        busiest_node=node,
+        busiest_node_mb=busiest_mb,
+        busiest_up_mb=float(stats.up[node]) * MB,
+        busiest_down_mb=float(stats.down[node]) * MB,
+        time_to_target_s=ttt,
+        busiest_mb_at_target=mb_at,
+        link_utilization_mean=float(used.mean()) if used.size else 0.0,
+        link_utilization_max=float(used.max()) if used.size else 0.0,
+        n_transfers=len(stats.transfers),
+        acc_trace=list(acc_trace),
+        busiest_timeline=stats.node_timeline(node))

@@ -206,6 +206,25 @@ def test_vmap_matches_loop(name, setup):
                                atol=5e-2)
 
 
+def test_vmap_handles_ragged_batch_schedules(setup):
+    import dataclasses as dc
+    task, clients, cfg = setup
+    # trim client 0 so step counts disagree (but all n >= batch_size): the
+    # stacked path must pad to max steps and mask the padded updates
+    c0 = clients[0]
+    ragged = [dc.replace(c0, train_x=c0.train_x[:-16], train_y=c0.train_y[:-16])]
+    ragged += list(clients[1:])
+    steps = {-(-c.n_train // cfg.batch_size) for c in ragged}
+    assert len(steps) > 1  # genuinely ragged
+    for name in ("dispfl", "dpsgd"):
+        res_loop = run_strategy(name, task, ragged, cfg, local_exec="loop")
+        res_vmap = run_strategy(name, task, ragged, cfg, local_exec="vmap")
+        np.testing.assert_allclose(res_vmap.final_accs, res_loop.final_accs,
+                                   atol=5e-2)
+        np.testing.assert_allclose(res_vmap.acc_history, res_loop.acc_history,
+                                   atol=5e-2)
+
+
 def test_vmap_refuses_momentum(setup):
     task, clients, _ = setup
     cfg = FLConfig(n_clients=4, rounds=1, local_epochs=1, batch_size=16,
