@@ -1,15 +1,16 @@
 # Repo verification entry points (see ROADMAP.md "Tier-1 verify").
 #
-#   make verify    - full test suite + smoke runs of the launchers
-#   make tier1     - only the tier1-marked fast core tests
-#   make test      - full test suite
-#   make sim-smoke - event-driven async network simulator smoke run
+#   make verify      - full test suite + smoke runs of the launchers
+#   make tier1       - only the tier1-marked fast core tests
+#   make test        - full test suite
+#   make sim-smoke   - event-driven async network simulator smoke run
+#   make codec-smoke - packed payload codec/gossip benchmark (bytes vs density)
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test tier1 smoke sim-smoke
+.PHONY: verify test tier1 smoke sim-smoke codec-smoke
 
-verify: test smoke sim-smoke
+verify: test smoke sim-smoke codec-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -25,3 +26,6 @@ sim-smoke:
 	$(PY) -m repro.launch.train simulate --sim --async --strategy dispfl \
 	    --rounds 3 --clients 4 --local-epochs 1 --samples-per-class 20 \
 	    --eval-every 3 --staleness 2 --compute-hetero --bandwidth-skew 10
+
+codec-smoke:
+	$(PY) -m benchmarks.run --only sparse_codec

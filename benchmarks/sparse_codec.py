@@ -1,0 +1,91 @@
+"""Packed payload subsystem: throughput and bytes-on-wire vs density.
+
+For each global density, a smallcnn-sized parameter tree is masked at an
+ERK allocation and pushed through the full packed pipeline: ``pack_tree``
+(message construction), ``codec.encode``/``decode`` (the wire), and a
+degree-3 ``packed_gossip_one`` (the mix hot path, jnp backend — what the
+engine runs on CPU).  Reported per cell: per-op wall time, the exact codec
+frame size, the dense frame it replaces, and the measured compression
+ratio — which should track density (values dominate the frame; the bitmap
+adds a fixed coords/8 floor).
+"""
+from __future__ import annotations
+
+from benchmarks.common import timer
+
+DENSITIES = [1.0, 0.5, 0.2, 0.1, 0.05]
+REPS = 5
+
+
+def _world(density: float, degree: int = 3, seed: int = 0):
+    import jax
+    from repro.core.masks import init_mask
+    from repro.fl import make_cnn_task
+
+    task = make_cnn_task("smallcnn", 10, 16, width=16)
+    key = jax.random.PRNGKey(seed)
+    params = task.init_fn(key)
+    masks = [init_mask(jax.random.fold_in(key, i), params, density)
+             for i in range(degree + 1)]
+    models = [jax.tree.map(lambda w, m: w * m, params, mk) for mk in masks]
+    return models, masks
+
+
+def run(fast: bool = True) -> list[dict]:
+    import numpy as np
+    from repro.sparse import (
+        TreeSpec,
+        decode,
+        encode,
+        encoded_nbytes,
+        pack_tree,
+        packed_gossip_one,
+        unpack_tree,
+    )
+    from repro.utils.tree import tree_size
+
+    reps = REPS if fast else 4 * REPS
+    rows = []
+    for density in DENSITIES:
+        models, masks = _world(density)
+        own_w, own_m = models[0], masks[0]
+        with timer() as t_pack:
+            for _ in range(reps):
+                packs = [pack_tree(w, m) for w, m in zip(models[1:], masks[1:])]
+        spec = TreeSpec.from_tree(packs[0])
+        with timer() as t_codec:
+            for _ in range(reps):
+                frames = [encode(p) for p in packs]
+                packs = [decode(f, spec) for f in frames]
+        with timer() as t_unpack:
+            for _ in range(reps):
+                unpack_tree(packs[0])
+        with timer() as t_gossip:
+            for _ in range(reps):
+                mixed = packed_gossip_one(own_w, own_m, packs)
+        del mixed
+        n_coords = tree_size(own_w)
+        wire = encoded_nbytes(packs[0])
+        dense_wire = encoded_nbytes(pack_tree(models[1]))
+        rows.append({
+            "name": f"sparse_codec/d={density}",
+            "us_per_call": round(t_gossip["s"] * 1e6 / reps),
+            "pack_us": round(t_pack["s"] * 1e6 / (reps * len(packs))),
+            "encode_decode_us": round(t_codec["s"] * 1e6 / (reps * len(packs))),
+            "unpack_us": round(t_unpack["s"] * 1e6 / reps),
+            "gossip_deg3_us": round(t_gossip["s"] * 1e6 / reps),
+            "wire_bytes": wire,
+            "dense_wire_bytes": dense_wire,
+            "bytes_ratio": round(wire / dense_wire, 4),
+            "coords": n_coords,
+        })
+    # the headline check: payload bytes shrink ~proportionally with density
+    # (bitmap floor = coords/8 + 8B header keeps the ratio slightly above d)
+    ratios = {r["name"].split("=")[1]: r["bytes_ratio"] for r in rows}
+    rows.append({
+        "name": "sparse_codec/check",
+        "ratio_tracks_density": all(
+            abs(ratios[str(d)] - d) < 0.04 + d * 0.1 for d in DENSITIES),
+        "ratios": ratios,
+    })
+    return rows

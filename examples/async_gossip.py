@@ -1,4 +1,4 @@
-"""Asynchronous DisPFL on a simulated heterogeneous network.
+"""Asynchronous DisPFL on a simulated heterogeneous network — packed payloads.
 
 Eight clients with 0.2x..1.0x compute speeds train decentralized sparse
 models through ``repro.sim.SimEngine``, twice on identical data and links:
@@ -7,15 +7,19 @@ models through ``repro.sim.SimEngine``, twice on identical data and links:
 * async gossip (staleness <= 2) — fast clients keep training and mix
   whichever neighbor models have physically arrived.
 
-The simulator measures every transfer (payload = sender's mask nnz), so the
-busiest-node MB and wall-clock below are observed, not assumed.
+Messages are ``repro.sparse`` packed trees (uint32 mask bitmap + the nnz
+values — what DisPFL actually ships), each activation mixes them with the
+O(degree · nnz) ``mix_one`` hook, and every simulated transfer is stamped
+with the exact wire-codec frame size — the busiest-node MB and wall-clock
+below are observed, not assumed.
 
     PYTHONPATH=src python examples/async_gossip.py
 """
 from repro.data import build_federated_image_task
 from repro.fl import FLConfig, make_cnn_task, make_strategy
-from repro.sim import LinkModel, SimEngine, hetero_speeds
+from repro.sim import LinkModel, SimEngine, hetero_speeds, measure_payload
 from repro.sim.report import time_to_target
+from repro.utils.tree import tree_bytes
 
 K, ROUNDS = 8, 10
 
@@ -30,17 +34,26 @@ speeds = hetero_speeds(K, seed=0)          # 0.2x .. 1.0x, shuffled
 links = LinkModel.uniform(K, mbps=50, latency_ms=20)
 print(f"clients={K} speeds={[round(float(s), 1) for s in speeds]}")
 
-engines = {}
-for mode, staleness in (("sync", 0), ("async", 2)):
-    eng = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+engines = {
+    mode: SimEngine(make_strategy("dispfl"), task, clients, cfg,
                     mode=mode, staleness=staleness, links=links,
                     round_s=1.0, compute_speeds=speeds)
+    for mode, staleness in (("sync", 0), ("async", 2))}
+
+# what one message physically is: the codec frame of a packed sparse tree
+payload = engines["sync"].strategy.snapshot_message(engines["sync"].state, 0)
+val_b, wire_b = measure_payload(payload)
+dense_b = tree_bytes(engines["sync"].state["params"][0])
+print(f"one message: {wire_b} B on the wire "
+      f"({val_b:.0f} B values + bitmap/header) vs {dense_b} B dense "
+      f"-> {wire_b / dense_b:.0%} of the dense tree")
+
+for mode, eng in engines.items():
     for m in eng.rounds():
         if m.acc_mean is not None:
             print(f"  [{mode}] round {m.round + 1:2d} "
                   f"acc={m.acc_mean:.3f} t_sim={m.sim_time_s:7.2f}s "
                   f"busiest={m.busiest_up_mb:.2f}MB up")
-    engines[mode] = eng
 
 target = min(max(a for _, a in e.acc_trace) for e in engines.values()) - 1e-9
 print(f"\ncommon target accuracy: {target:.3f}")

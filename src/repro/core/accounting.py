@@ -4,7 +4,11 @@ The paper reports, per communication round:
   * ``Comm (MB)`` — bytes moved through the *busiest* node.  Convention from
     the paper's released code: payload = 4 bytes per *transmitted value*
     (nnz of the sender's mask); the {0,1} mask bitmap itself is not counted
-    in the headline number (we also expose it).  Busiest node = max over
+    in the headline number (we also expose it).  With ``with_bitmap=True``
+    the quoted size is the *exact* wire frame of ``repro.sparse.codec``:
+    8-byte header + word-aligned bitmap (4 bytes per 32 coordinates) +
+    value bytes — analytic and measured reports agree bit for bit.
+    Busiest node = max over
     nodes of (bytes uploaded + bytes downloaded)/2 matched to their table:
     for a server with C connections it is C * model_bytes (download == upload
     so a single direction is quoted); for decentralized nodes it is
@@ -26,6 +30,13 @@ import numpy as np
 PyTree = Any
 
 BYTES_PER_VALUE = 4  # fp32 on the wire, per the paper
+HEADER_NBYTES = 8    # repro.sparse.codec frame header (magic/version/dtype/nnz)
+BITMAP_WORD_NBYTES = 4   # the bitmap packs 32 coordinates per uint32 word
+
+
+def bitmap_nbytes(n_coords: int) -> int:
+    """Exact word-aligned bitmap size over ``n_coords`` coordinates."""
+    return BITMAP_WORD_NBYTES * ((n_coords + 31) // 32)
 
 
 @dataclass
@@ -44,18 +55,21 @@ class CommReport:
         }
 
 
-def payload_bytes(n_values: int, n_coords: int = 0, with_bitmap: bool = False) -> float:
-    b = n_values * BYTES_PER_VALUE
+def payload_bytes(n_values: int, n_coords: int = 0, with_bitmap: bool = False,
+                  value_nbytes: int = BYTES_PER_VALUE) -> float:
+    b = n_values * value_nbytes
     if with_bitmap:
-        b += n_coords / 8.0
+        b += bitmap_nbytes(n_coords) + HEADER_NBYTES
     return b
 
 
-def message_bytes(nnz: int, n_coords: int = 0, with_bitmap: bool = False) -> float:
+def message_bytes(nnz: int, n_coords: int = 0, with_bitmap: bool = False,
+                  value_nbytes: int = BYTES_PER_VALUE) -> float:
     """On-wire size of one model message whose sender mask holds ``nnz``
-    values.  The simulator (``repro.sim``) measures every transfer with this
-    helper so its totals are commensurable with the analytic reports below."""
-    return payload_bytes(nnz, n_coords, with_bitmap)
+    values.  ``with_bitmap=True`` is the exact codec frame size
+    (``repro.sparse.codec.encoded_nbytes``); the simulator stamps every
+    transfer with it so measured totals and analytic reports agree."""
+    return payload_bytes(nnz, n_coords, with_bitmap, value_nbytes)
 
 
 def edge_message_bytes(
@@ -73,6 +87,31 @@ def edge_message_bytes(
     per_sender = np.asarray(
         [message_bytes(v, n_coords, with_bitmap) for v in nnz_per_client])
     return (a > 0) * per_sender[None, :]
+
+
+def measured_comm(adjacency: np.ndarray, value_nbytes_per_client: list[float],
+                  wire_nbytes_per_client: list[int]) -> CommReport:
+    """Measured mode: a ``CommReport`` from *real encoded* message sizes.
+
+    ``wire_nbytes_per_client[j]`` is ``codec.encoded_nbytes`` of j's actual
+    packed payload (bitmap + header included); ``value_nbytes_per_client``
+    carries the paper's headline value-bytes.  Busiest-node convention is
+    identical to ``decentralized_comm`` — for fp32 payloads the two reports
+    are equal bit for bit, and they diverge exactly when the payload does
+    (fp16 values, annealed densities, partial payloads)."""
+    a = (np.asarray(adjacency, dtype=float) > 0).astype(float)
+    np.fill_diagonal(a, 0.0)
+    e = a * np.asarray(value_nbytes_per_client, dtype=float)[None, :]
+    e_w = a * np.asarray(wire_nbytes_per_client, dtype=float)[None, :]
+    per_node = np.maximum(e.sum(axis=0), e.sum(axis=1))
+    per_node_w = np.maximum(e_w.sum(axis=0), e_w.sum(axis=1))
+    mb = 1.0 / 1e6
+    return CommReport(
+        busiest_mb=float(per_node.max()) * mb,
+        avg_per_node_mb=float(per_node.mean()) * mb,
+        total_mb=float(e.sum()) * mb,
+        busiest_mb_with_bitmap=float(per_node_w.max()) * mb,
+    )
 
 
 def decentralized_comm(

@@ -86,6 +86,22 @@ def erk_layer_densities(
     return out
 
 
+def annealed_density(d0: float, d_final: float, t: int, t_end: int) -> float:
+    """Cosine sparse-to-sparser density schedule (DA-DPFL, Long et al. 2024).
+
+    Decays from ``d0`` at t=0 to ``d_final`` at ``t_end``; the annealed
+    value re-enters ``erk_layer_densities`` so every round's mask budget is
+    a proper ERK allocation at the scheduled global density.
+    """
+    import math
+
+    if not 0.0 < d_final <= d0:
+        raise ValueError(
+            f"need 0 < d_final <= d0, got d_final={d_final}, d0={d0}")
+    frac = 0.5 * (1.0 + math.cos(min(t, t_end) * math.pi / max(t_end, 1)))
+    return d_final + (d0 - d_final) * frac
+
+
 def erk_densities_for_params(
     params: PyTree,
     density: float,

@@ -98,6 +98,9 @@ class FLConfig:
     density: float = 0.5
     capacities: Optional[list[float]] = None   # per-client densities
     alpha0: float = 0.5                  # initial prune rate (cosine annealed)
+    # dispfl_anneal: end-of-run density of the DA-DPFL-style cosine
+    # sparse-to-sparser schedule (None -> density / 4)
+    density_final: Optional[float] = None
     # Ditto / FOMO / fine-tuning
     prox_lambda: float = 0.75
     ft_epochs: int = 2

@@ -231,6 +231,14 @@ class DittoStrategy(StrategyBase):
         weights = [s / sum(sizes) for s in sizes]
         state["w_global"] = _mean_trees([locals_[k] for k in sel], weights)
 
+    def local_params(self, state: dict, k: int):
+        # what a Ditto client puts on the wire is its copy of the global
+        # model (the personal model never leaves the device)
+        return state["w_global"]
+
+    def set_local(self, state: dict, k: int, params) -> None:
+        state["w_global"] = params
+
     def eval_params(self, state: dict, ctx: RoundCtx):
         return state["personal"]
 

@@ -27,6 +27,7 @@ from repro.fl.engine import (
     register,
     run_strategy,
 )
+from repro.sparse import packed_axpy
 from repro.utils.tree import tree_nnz, tree_size
 
 
@@ -88,6 +89,22 @@ class DPSGDStrategy(StrategyBase):
                     lambda u, v: u + v, acc, contrib)
             mixed.append(acc)
         state["params"] = mixed
+
+    def mix_one(self, state: dict, k: int, senders: dict[int, dict],
+                ctx: RoundCtx) -> None:
+        """O(degree · nnz) per-activation mixing: Metropolis weights on k's
+        star neighborhood, neighbor models folded in packed (dense models
+        ride an all-ones bitmap), no other client touched."""
+        if not senders:
+            return
+        n = len(state["params"])
+        a = np.eye(n)
+        a[k, sorted(senders)] = 1.0
+        w_mix = metropolis_weights(a)
+        acc = jax.tree.map(lambda x: w_mix[k, k] * x, state["params"][k])
+        for j in sorted(senders):
+            acc = packed_axpy(acc, senders[j]["packed"], float(w_mix[k, j]))
+        state["params"][k] = acc
 
     def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
         c = self.clients[k]

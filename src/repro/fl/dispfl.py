@@ -20,19 +20,40 @@ import jax
 from repro.core.accounting import decentralized_comm, sparse_training_flops
 from repro.core.evolve import evolve_masks, layer_nnz_budgets
 from repro.core.gossip import gossip_average_one
-from repro.core.masks import apply_mask, erk_densities_for_params, init_mask
+from repro.core.masks import (
+    annealed_density,
+    apply_mask,
+    erk_densities_for_params,
+    init_mask,
+)
 from repro.fl.base import FLConfig, FLResult, Task, local_sgd
 from repro.fl.engine import RoundCtx, StrategyBase, register, run_strategy
+from repro.sparse import (
+    pack_tree,
+    packed_gossip_one,
+    unpack_mask_tree,
+    unpack_tree,
+)
 from repro.utils.tree import tree_nnz, tree_size
 
 
 @register("dispfl")
 class DisPFLStrategy(StrategyBase):
     """State: ``{"params": [K trees], "masks": [K trees]}``.  ERK budgets and
-    densities are static given (cfg, model) and live on ``self``."""
+    densities are static given (cfg, model) and live on ``self``.
+
+    ``packed=True`` (the default) runs the gossip phase on ``repro.sparse``
+    packed payloads — each sender is packed once (bitmap + nnz values, the
+    message that physically crosses a link) and decoded once per round; the
+    async per-activation path (``mix_one``) folds the payloads directly
+    into (num, den) accumulators.  Both are bit-identical to the dense
+    ``packed=False`` reference path (golden-tested)."""
 
     vmap_capable = True
     decentralized = True
+
+    def __init__(self, packed: bool = True):
+        self.packed = packed
 
     def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
         super().init_state(task, clients, cfg)
@@ -57,13 +78,40 @@ class DisPFLStrategy(StrategyBase):
         a = ctx.adjacency
         params, masks = state["params"], state["masks"]
         k_clients = len(params)
-        mixed = []
-        for k in range(k_clients):
-            nbrs = [j for j in range(k_clients) if a[k, j] > 0 and j != k]
-            mixed.append(gossip_average_one(
-                params[k], masks[k],
-                [params[j] for j in nbrs], [masks[j] for j in nbrs]))
-        state["params"] = mixed
+        nbrs_of = [[j for j in range(k_clients) if a[k, j] > 0 and j != k]
+                   for k in range(k_clients)]
+        if self.packed:
+            # produce/consume the same O(nnz) packed messages the simulator
+            # ships: pack each sender once, decode once (not once per
+            # receiving edge — the barrier mix is a broadcast, so a shared
+            # decode is the cheap shape here; the async per-activation path
+            # is mix_one, which folds payloads without a shared decode)
+            senders = sorted({j for nbrs in nbrs_of for j in nbrs})
+            payloads = {j: pack_tree(params[j], masks[j]) for j in senders}
+            dec_w = {j: unpack_tree(p) for j, p in payloads.items()}
+            dec_m = {j: unpack_mask_tree(p) for j, p in payloads.items()}
+            state["params"] = [
+                gossip_average_one(params[k], masks[k],
+                                   [dec_w[j] for j in nbrs_of[k]],
+                                   [dec_m[j] for j in nbrs_of[k]])
+                for k in range(k_clients)]
+            return
+        state["params"] = [
+            gossip_average_one(params[k], masks[k],
+                               [params[j] for j in nbrs_of[k]],
+                               [masks[j] for j in nbrs_of[k]])
+            for k in range(k_clients)]
+
+    def mix_one(self, state: dict, k: int, senders: dict[int, dict],
+                ctx: RoundCtx) -> None:
+        """Per-activation gossip that folds exactly the arrived packed
+        payloads — O(degree) folds, no swap-in/restore of the other K-1
+        clients (see repro.sparse.ops for the precise cost model)."""
+        if not senders:
+            return
+        packs = [senders[j]["packed"] for j in sorted(senders)]
+        state["params"][k] = packed_gossip_one(
+            state["params"][k], state["masks"][k], packs)
 
     def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
         c = self.clients[k]
@@ -97,6 +145,72 @@ class DisPFLStrategy(StrategyBase):
 def _mean_density(densities: list[dict[str, float]]) -> dict[str, float]:
     keys = densities[0].keys()
     return {k: float(np.mean([d[k] for d in densities])) for k in keys}
+
+
+@register("dispfl_anneal")
+class DisPFLAnnealStrategy(DisPFLStrategy):
+    """DA-DPFL-style sparse-to-sparser training (Long et al., 2024).
+
+    Same hooks as DisPFL, but the per-client mask budget follows a cosine
+    density schedule from ``cfg.density`` down to ``density_final``
+    (default ``cfg.density_final`` or a quarter of the start): each round's
+    mask search prunes to the *annealed* ERK budgets and regrows within
+    them, so payloads — packed bitmap + nnz values — physically shrink
+    round over round (the variable-size regime the codec-measured
+    simulator links exercise)."""
+
+    def __init__(self, density_final: float | None = None,
+                 packed: bool = True):
+        super().__init__(packed=packed)
+        #: constructor override; None defers to cfg at init_state time
+        self.density_final = density_final
+
+    def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
+        state = super().init_state(task, clients, cfg)
+        # resolved per init_state so re-initializing with a new cfg re-reads
+        # it (the ctor override, if any, stays authoritative)
+        self._d_final = (self.density_final if self.density_final is not None
+                         else cfg.density_final or cfg.density / 4.0)
+        self._template = state["params"][0]      # shapes only
+        self._budget_cache: dict[tuple[int, float], dict[str, int]] = {}
+        self._flops_density_cache: dict[int, dict[str, float]] = {}
+        return state
+
+    def density_at(self, t: int, k: int = 0) -> float:
+        d0 = self.cfg.client_density(k)
+        d_end = self._d_final * d0 / self.cfg.density
+        return annealed_density(d0, d_end, t, self.cfg.rounds)
+
+    def _budgets_at(self, t: int, k: int) -> dict[str, int]:
+        key = (t, self.cfg.client_density(k))
+        if key not in self._budget_cache:
+            dens = erk_densities_for_params(self._template,
+                                            self.density_at(t, k))
+            self._budget_cache[key] = layer_nnz_budgets(self._template, dens)
+        return self._budget_cache[key]
+
+    def evolve(self, state: dict, k: int, ctx: RoundCtx) -> None:
+        xb, yb = self.clients[k].sample_batch(ctx.client_rng(k),
+                                              ctx.cfg.batch_size)
+        _, g = self.task.value_and_grad(state["params"][k], xb, yb)
+        # the annealed budget both prunes (down to the schedule) and regrows
+        # (within it): nnz(mask) == budget exactly after each round
+        m_new, w_new = evolve_masks(state["params"][k], state["masks"][k], g,
+                                    ctx.prune_rate, self._budgets_at(ctx.t, k))
+        state["masks"][k], state["params"][k] = m_new, w_new
+
+    def round_flops(self, state: dict, ctx: RoundCtx):
+        # mean over clients' annealed ERK allocations, matching the base
+        # strategy's _mean_density convention under heterogeneous capacities
+        if ctx.t not in self._flops_density_cache:
+            self._flops_density_cache[ctx.t] = _mean_density([
+                erk_densities_for_params(self._template,
+                                         self.density_at(ctx.t, k))
+                for k in range(len(self.clients))])
+        return sparse_training_flops(
+            self.task.fwd_flops, self._flops_density_cache[ctx.t],
+            self.n_samples, ctx.cfg.local_epochs,
+            mask_search_batches=1, batch_size=ctx.cfg.batch_size)
 
 
 def run_dispfl(task: Task, clients, cfg: FLConfig, targets=(0.5,),

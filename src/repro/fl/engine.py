@@ -28,11 +28,12 @@ via ``np.random.SeedSequence`` — no shared generator threads through the
 loop — so results are independent of client iteration order and a resumed
 run is bit-identical to an uninterrupted one.
 
-Fast path: for homogeneous-density clients with equal step counts, the
-local phase is executed as one jitted ``jax.vmap``-over-clients
-``lax.scan`` instead of a Python loop over K clients (``local_exec="vmap"``
-or ``"auto"``); batch orders are drawn from the same per-client generators,
-so the schedule matches the per-client loop exactly.
+Fast path: for homogeneous-density clients, the local phase is executed as
+one jitted ``jax.vmap``-over-clients ``lax.scan`` instead of a Python loop
+over K clients (``local_exec="vmap"`` or ``"auto"``); batch orders are
+drawn from the same per-client generators, ragged step counts are padded
+and masked, and momentum travels as stacked per-client optimizer state —
+so the schedule and update rule match the per-client loop exactly.
 """
 from __future__ import annotations
 
@@ -59,6 +60,7 @@ from repro.fl.base import (
 )
 from repro.models.common import softmax_xent
 from repro.optim import SGDConfig, masked_sgd_step, sgd_step
+from repro.sparse import pack_tree, unpack_mask_tree, unpack_tree
 from repro.utils.tree import tree_index, tree_nnz, tree_size, tree_stack
 
 PyTree = Any
@@ -207,16 +209,49 @@ class StrategyBase:
         return tree_size(self.local_params(state, k))
 
     def snapshot_message(self, state: dict, k: int) -> dict:
-        """Immutable snapshot of what k would transmit right now (jax arrays
-        are immutable, so holding references is safe)."""
-        return {"params": self.local_params(state, k),
-                "mask": self.local_mask(state, k)}
+        """What k transmits right now: a ``repro.sparse`` packed tree —
+        bitmap + nnz values, never the dense pytree.  Dense strategies pack
+        against an all-ones bitmap, so one wire format serves the whole zoo
+        (``sim.links.measure_payload`` sizes it via the codec)."""
+        return {"packed": pack_tree(self.local_params(state, k),
+                                    self.local_mask(state, k))}
 
     def install_message(self, state: dict, k: int, msg: dict) -> None:
         """Write a received message into slot k (the simulator swaps these in
         temporarily so ``mix`` sees arrived — possibly stale — models)."""
-        self.set_local(state, k, msg["params"])
-        self.set_local_mask(state, k, msg["mask"])
+        if "packed" in msg:
+            self.set_local(state, k, unpack_tree(msg["packed"]))
+            self.set_local_mask(state, k, unpack_mask_tree(msg["packed"]))
+        else:
+            self.set_local(state, k, msg["params"])
+            self.set_local_mask(state, k, msg["mask"])
+
+    def mix_one(self, state: dict, k: int, senders: dict[int, dict],
+                ctx: RoundCtx) -> None:
+        """Mix client k against the payloads that have *arrived* (the async
+        simulator's per-activation communication hook).
+
+        Generic fallback: swap the payloads into their slots, run the full
+        ``mix`` on an adjacency whose only non-identity row is k's, keep
+        only k's mixed model — correct for any strategy, but O(K) tree work
+        per activation.  Decentralized strategies override it with packed
+        O(degree)-fold implementations (``repro.sparse.ops``) whose cost
+        tracks node degree, never K."""
+        if not senders:
+            # gossip self-mix is the identity (dispfl: re-masking an
+            # already-masked model; dpsgd: W[k,k]=1) — skip the O(K) mix
+            return
+        saved_params = list(state["params"])
+        saved_masks = list(state["masks"]) if "masks" in state else None
+        for j, payload in senders.items():
+            self.install_message(state, j, payload)
+        self.mix(state, ctx)
+        mixed_k = state["params"][k]
+        state["params"] = saved_params
+        state["params"][k] = mixed_k
+        if saved_masks is not None:
+            saved_masks[k] = state["masks"][k]
+            state["masks"] = saved_masks
 
 
 # ---------------------------------------------------------------------------
@@ -386,9 +421,9 @@ class RoundEngine:
     * ``"loop"`` — per-client Python loop (the reference semantics),
     * ``"vmap"`` — force the stacked jax.vmap local phase (errors if the
       strategy/config cannot take it),
-    * ``"auto"`` — vmap when the strategy is vmap-capable, momentum is off,
-      densities are homogeneous and all active clients share a batch
-      schedule; loop otherwise.
+    * ``"auto"`` — vmap when the strategy is vmap-capable, densities are
+      homogeneous and all active clients agree on an effective batch size
+      (momentum rides along as stacked optimizer state); loop otherwise.
     """
 
     def __init__(self, strategy: StrategyBase, task: Task, clients,
@@ -577,8 +612,6 @@ class RoundEngine:
         cfg = self.cfg
         if not self.strategy.vmap_capable:
             return False, f"strategy '{self.strategy.name}' is not vmap-capable"
-        if cfg.momentum != 0.0:
-            return False, "momentum != 0 needs per-client optimizer state"
         if cfg.capacities is not None:
             return False, "heterogeneous capacities use the per-client loop"
         ns = [self.clients[k].n_train for k in active]
@@ -593,9 +626,11 @@ class RoundEngine:
         if use_mask in self._vmap_fns:
             return self._vmap_fns[use_mask]
         task = self.task
-        # same update rule as the per-client loop (repro.optim); the vmap
-        # gate guarantees momentum == 0, so the optimizer state is empty
-        opt = SGDConfig(momentum=0.0, weight_decay=self.cfg.weight_decay)
+        # same update rule as the per-client loop (repro.optim); momentum
+        # rides along as stacked per-client optimizer state, zero-initialized
+        # each local phase exactly like the loop's init_sgd
+        opt = SGDConfig(momentum=self.cfg.momentum,
+                        weight_decay=self.cfg.weight_decay)
 
         def loss(p, x, y):
             return softmax_xent(task.apply_fn(p, x), y)
@@ -603,19 +638,23 @@ class RoundEngine:
         grad = jax.grad(loss)
 
         def per_client(p, m, bx, by, live, lr):
-            def body(w, xyl):
+            def body(carry, xyl):
+                w, st = carry
                 x, y, lv = xyl
                 g = grad(w, x, y)
                 if use_mask:
-                    w2, _ = masked_sgd_step(w, g, m, {}, opt, lr)
+                    w2, st2 = masked_sgd_step(w, g, m, st, opt, lr)
                 else:
-                    w2, _ = sgd_step(w, g, {}, opt, lr)
+                    w2, st2 = sgd_step(w, g, st, opt, lr)
                 # padded steps (ragged per-client schedules) are no-ops;
                 # jnp.where keeps live steps bit-identical to the plain step
                 w = jax.tree.map(lambda o, n: jnp.where(lv, n, o), w, w2)
-                return w, None
+                st = jax.tree.map(lambda o, n: jnp.where(lv, n, o), st, st2)
+                return (w, st), None
 
-            p, _ = jax.lax.scan(body, p, (bx, by, live))
+            st0 = ({"mu": jax.tree.map(jnp.zeros_like, p)}
+                   if opt.momentum != 0.0 else {})
+            (p, _), _ = jax.lax.scan(body, (p, st0), (bx, by, live))
             return p
 
         if use_mask:

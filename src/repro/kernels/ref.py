@@ -17,6 +17,18 @@ def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
     return (x @ (w * mask.astype(w.dtype))).astype(x.dtype)
 
 
+def packed_accum_ref(num: jax.Array, den: jax.Array, flags: jax.Array,
+                     values: jax.Array, alpha: float = 1.0):
+    """Oracle for kernels.packed_accum: num += alpha * scatter(values at
+    flags), den += flags.  flags: (N,) bool; values: (nnz,) in flag order."""
+    flags = flags.reshape(-1)
+    pos = jnp.cumsum(flags.astype(jnp.int32)) - 1
+    vals = jnp.take(values.astype(jnp.float32), jnp.maximum(pos, 0))
+    contrib = jnp.where(flags, vals, 0.0)
+    return (num + jnp.float32(alpha) * contrib,
+            den + flags.astype(jnp.float32))
+
+
 def prune_regrow_ref(w: jax.Array, g: jax.Array, m: jax.Array,
                      w_thresh, g_thresh):
     wf = w.astype(jnp.float32)

@@ -34,6 +34,6 @@ from repro.sim.events import (  # noqa: F401
     VirtualClock,
     hetero_speeds,
 )
-from repro.sim.links import LinkModel, LinkStats  # noqa: F401
+from repro.sim.links import LinkModel, LinkStats, measure_payload  # noqa: F401
 from repro.sim.async_engine import SimEngine, SimRoundMetrics  # noqa: F401
 from repro.sim.report import MetricsStream, SimReport, build_report  # noqa: F401

@@ -13,11 +13,13 @@ client up/down schedules (``sim.availability``).  Two modes:
   sender's current mask nnz.
 
 * ``mode="async"`` — staleness-aware asynchronous push-gossip.  Each client
-  runs its own local-round clock: wake, mix whatever neighbor models have
-  *arrived* by now, train for ``flops / (flops_per_s * speed_k)`` virtual
-  seconds, push the updated sparse model to ``degree`` sampled receivers
-  (transfer time from the link model, payload from the sender's nnz), sleep
-  until the sends are scheduled, repeat.  ``staleness >= 0`` enforces the
+  runs its own local-round clock: wake, mix whatever neighbor payloads have
+  *arrived* by now via the per-client ``Strategy.mix_one`` hook (O(degree)
+  packed folds for the decentralized strategies, generic O(K) swap
+  fallback otherwise), train for ``flops / (flops_per_s * speed_k)``
+  virtual seconds, push the updated *packed* sparse model to ``degree``
+  sampled receivers (transfer time from the link model, payload sized by
+  the wire codec), sleep until the sends are scheduled, repeat.  ``staleness >= 0`` enforces the
   bounded-staleness (stale-synchronous-parallel) protocol: no client may run
   more than ``staleness`` rounds ahead of the slowest, and messages older
   than the bound are not mixed; ``staleness < 0`` is fully asynchronous.
@@ -52,7 +54,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.accounting import edge_message_bytes, message_bytes
+from repro.core.accounting import edge_message_bytes
 from repro.core.evolve import cosine_prune_rate
 from repro.core.topology import directed_out_neighbors, make_adjacency
 from repro.fl.base import evaluate_clients
@@ -71,7 +73,7 @@ from repro.sim.events import (
     EventQueue,
     VirtualClock,
 )
-from repro.sim.links import MB, LinkModel, LinkStats
+from repro.sim.links import MB, LinkModel, LinkStats, measure_payload
 from repro.sim.report import SimReport, build_report
 
 
@@ -231,29 +233,16 @@ class SimEngine(RoundEngine):
         yield from self._async_rounds()
 
     def _mix_one(self, k: int, senders: dict[int, _Message], ctx: RoundCtx) -> None:
-        """Run the strategy's ``mix`` from client k's local view.
+        """Mix client k against arrived payloads via ``Strategy.mix_one``.
 
-        Arrived neighbor snapshots are swapped into the state, ``mix`` runs
-        on an adjacency whose only non-identity row is k's, and everything
-        but k's mixed model is restored afterwards — so any Strategy's
-        communication rule works unmodified in the async regime.
+        Decentralized strategies implement it as O(degree) packed folds
+        (``repro.sparse.ops``); the ``StrategyBase`` fallback swaps the
+        payloads in, runs the full ``mix`` on an adjacency whose only
+        non-identity row is k's, and restores — correct for any strategy,
+        but O(K) tree work per activation.
         """
-        if not senders:
-            # gossip self-mix is the identity (dispfl: re-masking an
-            # already-masked model; dpsgd: W[k,k]=1) — skip the O(K) mix
-            return
-        strat, state = self.strategy, self.state
-        saved_params = list(state["params"])
-        saved_masks = list(state["masks"]) if "masks" in state else None
-        for j, msg in senders.items():
-            strat.install_message(state, j, msg.payload)
-        strat.mix(state, ctx)
-        mixed_k = state["params"][k]
-        state["params"] = saved_params
-        state["params"][k] = mixed_k
-        if saved_masks is not None:
-            saved_masks[k] = state["masks"][k]
-            state["masks"] = saved_masks
+        self.strategy.mix_one(
+            self.state, k, {j: m.payload for j, m in senders.items()}, ctx)
 
     def _async_rounds(self):
         cfg = self.cfg
@@ -452,15 +441,14 @@ class SimEngine(RoundEngine):
             self.run_local_phase(ctx, [k])
             strat.evolve(self.state, k, ctx)
 
-            # 3. compute time, then push to sampled receivers
+            # 3. compute time, then push to sampled receivers.  The payload
+            # is the packed message itself; its sizes are codec-measured
+            # from what actually ships, not recomputed from nnz
             flops = strat.round_flops(self.state, ctx).per_round_flops
             finish = ev.time + self.compute.local_time(k, flops)
-            nnz = strat.message_nnz(self.state, k)
-            coords = strat.message_coords(self.state, k)
-            bytes_v = message_bytes(nnz)
-            bytes_w = message_bytes(nnz, coords, with_bitmap=True)
-            msg = _Message(version=t_k + 1,
-                           payload=strat.snapshot_message(self.state, k))
+            payload = strat.snapshot_message(self.state, k)
+            bytes_v, bytes_w = measure_payload(payload)
+            msg = _Message(version=t_k + 1, payload=payload)
             for j in directed_out_neighbors(n, k, t_k, cfg.degree, cfg.seed):
                 j = int(j)
                 arrive = finish + self.links.transfer_time(bytes_w, k, j)

@@ -2,12 +2,15 @@
 
 ``LinkModel`` maps a message size to a transfer time per directed edge
 (latency + bytes / bandwidth).  ``LinkStats`` records every transfer the
-simulator actually performs — sender, receiver, payload bytes computed from
-the *sender's current mask nnz* via ``repro.core.accounting.message_bytes``
-— so busiest-node traffic and per-link utilization are measured quantities,
-not analytic assumptions.  On a static topology the measured totals are
-bit-commensurable with ``core.accounting.decentralized_comm`` (the property
-test in ``tests/test_sim.py`` asserts exactly that).
+simulator actually performs — sender, receiver, and the payload's size
+*measured from what is actually shipped*: messages are ``repro.sparse``
+packed trees and ``measure_payload`` sizes them with the wire codec
+(``codec.encoded_nbytes``, bitmap and frame header included), so
+busiest-node traffic and per-link utilization are measured quantities, not
+analytic assumptions.  The codec frame is an exact function of (nnz,
+coords, itemsize), which keeps measured totals bit-commensurable with
+``core.accounting.decentralized_comm`` (the property test in
+``tests/test_sim.py`` asserts exactly that).
 """
 from __future__ import annotations
 
@@ -16,7 +19,38 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.accounting import message_bytes
+from repro.sparse import PackedSparse, codec
+from repro.utils.tree import tree_nnz, tree_size
+
 MB = 1e-6  # decimal MB, matching the paper's tables
+
+
+def measure_payload(payload: dict) -> tuple[float, int]:
+    """(value bytes, wire bytes) of one message payload.
+
+    Packed payloads (the default ``StrategyBase.snapshot_message``) are
+    sized exactly: value bytes from the held values' own itemsize, wire
+    bytes from ``codec.encoded_nbytes`` of the frame the link would carry.
+    Dense ``{"params", "mask"}`` payloads fall back to the analytic
+    ``accounting.message_bytes`` from the mask's nnz.
+    """
+    packed = payload.get("packed")
+    if packed is not None:
+        import jax
+
+        # metadata only (nnz * itemsize) — no device-to-host copy
+        nbytes = sum(
+            p.nnz * np.dtype(p.values.dtype).itemsize
+            for p in jax.tree.leaves(
+                packed, is_leaf=lambda x: isinstance(x, PackedSparse)))
+        return float(nbytes), codec.encoded_nbytes(packed)
+    params = payload["params"]
+    nnz = (tree_nnz(payload["mask"]) if payload.get("mask") is not None
+           else tree_size(params))
+    coords = tree_size(params)
+    return (message_bytes(nnz),
+            int(message_bytes(nnz, coords, with_bitmap=True)))
 
 
 class LinkModel:

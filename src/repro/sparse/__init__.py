@@ -1,0 +1,57 @@
+"""repro.sparse — packed sparse payloads, end to end.
+
+DisPFL's communication claim is that a peer ships only ``nnz(mask)``
+values per message.  This package makes that *physical* instead of
+analytic: a message is a ``PackedSparse`` tree (uint32 mask bitmap + the
+contiguous held values), it is what strategies snapshot, what the network
+simulator's links carry (sized by the codec, byte-exact), and what the
+per-client mix computes on — the dense pytree never crosses a link.
+
+Modules
+-------
+``packed``   ``PackedSparse`` container (registered jax pytree) +
+             ``pack/unpack``/``pack_tree``/``unpack_tree``; bit-exact
+             roundtrip ``unpack(pack(w, m)) == w ⊙ m``
+``codec``    deterministic wire frames: 8-byte header + word-aligned
+             bitmap over the concatenated coordinates + values;
+             ``encoded_nbytes`` equals ``core.accounting.message_bytes(...,
+             with_bitmap=True)`` exactly, so analytic and measured comm
+             reports agree bit for bit
+``ops``      packed gossip / axpy: fold payloads into (num, den)
+             accumulators, O(degree) folds per activation (degree-not-K;
+             see the module docstring for the honest cost model) — jnp
+             reference backend plus the fused
+             ``repro.kernels.packed_accum`` Pallas kernel
+
+Consumers
+---------
+``repro.fl.engine.StrategyBase`` snapshots messages as packed trees and
+exposes a per-client ``mix_one`` hook; ``repro.fl.dispfl`` /
+``repro.fl.decentralized`` implement it with ``ops.packed_gossip_one`` /
+``ops.packed_axpy``; ``repro.sim`` stamps every simulated transfer with
+``codec.encoded_nbytes`` of the actual payload.  The density-annealing
+strategy (``dispfl_anneal``) exercises variable-size payloads round over
+round.  ``benchmarks/sparse_codec.py`` tracks pack/gossip throughput and
+bytes-vs-density.
+"""
+from repro.sparse.codec import (  # noqa: F401
+    TreeSpec,
+    decode,
+    encode,
+    encoded_nbytes,
+)
+from repro.sparse.ops import (  # noqa: F401
+    packed_axpy,
+    packed_gossip_one,
+)
+from repro.sparse.packed import (  # noqa: F401
+    PackedSparse,
+    pack,
+    pack_tree,
+    tree_packed_coords,
+    tree_packed_nnz,
+    unpack,
+    unpack_mask,
+    unpack_mask_tree,
+    unpack_tree,
+)

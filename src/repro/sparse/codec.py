@@ -1,0 +1,155 @@
+"""Deterministic wire serialization for packed sparse messages.
+
+Frame layout (little-endian throughout)::
+
+    [magic u16][version u8][dtype u8][nnz u32]     8-byte header
+    [bitmap: ceil(n_coords / 32) uint32 words]     mask over the
+                                                   *concatenated* leaf
+                                                   coordinate space
+    [values: nnz * itemsize bytes]                 held values, leaf order
+
+Both endpoints share the model architecture, so leaf shapes / dtypes /
+tree structure travel once as a ``TreeSpec`` (negotiated out of band, like
+a schema), never per message.  Leaf bit-streams are concatenated *without*
+inter-leaf padding: the frame size is therefore an exact function of
+``(nnz, n_coords, itemsize)``, which is what lets ``core.accounting`` quote
+the same number analytically —
+
+    encoded_nbytes(packed) == accounting.message_bytes(
+        nnz, n_coords, with_bitmap=True, value_nbytes=itemsize)
+
+bit for bit (asserted across every registered strategy in
+``tests/test_sparse.py``).  ``repro.sim`` stamps each simulated transfer
+with ``encoded_nbytes`` of the actual payload, so measured bytes-on-wire
+and analytic reports stay commensurable by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accounting import HEADER_NBYTES, bitmap_nbytes
+from repro.sparse.packed import (
+    PackedSparse,
+    _is_packed,
+    _pack_bits,
+    _unpack_bits,
+    n_words,
+)
+
+PyTree = Any
+
+MAGIC = 0x5350            # "SP"
+VERSION = 1
+_HEADER = struct.Struct("<HBBI")
+assert _HEADER.size == HEADER_NBYTES
+
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float16): 1}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """The out-of-band message schema: tree structure + leaf shapes/dtype."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtype: np.dtype
+
+    @classmethod
+    def from_tree(cls, tree: PyTree, dtype=np.float32) -> "TreeSpec":
+        """Build from a template — dense params or an already-packed tree."""
+        leaves = jax.tree.leaves(tree, is_leaf=_is_packed)
+        if leaves and isinstance(leaves[0], PackedSparse):
+            shapes = tuple(p.shape for p in leaves)
+            dtype = np.asarray(leaves[0].values).dtype
+            treedef = jax.tree.structure(tree, is_leaf=_is_packed)
+        else:
+            shapes = tuple(tuple(x.shape) for x in leaves)
+            treedef = jax.tree.structure(tree)
+        return cls(treedef=treedef, shapes=shapes, dtype=np.dtype(dtype))
+
+    @property
+    def n_coords(self) -> int:
+        return sum(int(np.prod(s)) for s in self.shapes)
+
+
+def _leaves(packed: PyTree) -> list[PackedSparse]:
+    leaves = jax.tree.leaves(packed, is_leaf=_is_packed)
+    for p in leaves:
+        if not isinstance(p, PackedSparse):
+            raise TypeError(f"expected a tree of PackedSparse, got {type(p)}")
+    return leaves
+
+
+def encoded_nbytes(packed: PyTree) -> int:
+    """Exact frame size of ``encode(packed)`` — header + word-aligned
+    bitmap over the concatenated coordinates + value bytes."""
+    leaves = _leaves(packed)
+    nnz = sum(p.nnz for p in leaves)
+    n_coords = sum(p.n_coords for p in leaves)
+    # metadata only — never materializes device values
+    itemsize = np.dtype(leaves[0].values.dtype).itemsize if leaves else 4
+    return HEADER_NBYTES + bitmap_nbytes(n_coords) + itemsize * nnz
+
+
+def encode(packed: PyTree) -> bytes:
+    """Serialize a packed tree to one wire frame (little-endian)."""
+    leaves = _leaves(packed)
+    dtype = np.asarray(leaves[0].values).dtype
+    if dtype not in _DTYPE_CODES:
+        raise ValueError(f"unsupported wire dtype {dtype}")
+    if any(np.asarray(p.values).dtype != dtype for p in leaves):
+        raise ValueError("all leaves of one message must share a value dtype")
+    # concatenate leaf bit-streams with no inter-leaf padding, then repack
+    flags = np.concatenate(
+        [_unpack_bits(np.asarray(p.bitmap), p.n_coords) for p in leaves]
+    ) if leaves else np.zeros(0, dtype=bool)
+    words = _pack_bits(flags)
+    values = (np.concatenate([np.asarray(p.values) for p in leaves])
+              if leaves else np.zeros(0, dtype))
+    nnz = int(values.size)
+    out = b"".join([
+        _HEADER.pack(MAGIC, VERSION, _DTYPE_CODES[dtype], nnz),
+        words.astype("<u4").tobytes(),
+        values.astype(values.dtype.newbyteorder("<")).tobytes(),
+    ])
+    assert len(out) == encoded_nbytes(packed)
+    return out
+
+
+def decode(data: bytes, spec: TreeSpec) -> PyTree:
+    """Rebuild the packed tree from one frame + its out-of-band schema."""
+    magic, version, code, nnz = _HEADER.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise ValueError(f"bad magic 0x{magic:04x}")
+    if version != VERSION:
+        raise ValueError(f"unsupported codec version {version}")
+    dtype = _CODE_DTYPES[code]
+    n_coords = spec.n_coords
+    off = HEADER_NBYTES
+    nb_bitmap = bitmap_nbytes(n_coords)
+    words = np.frombuffer(data, dtype="<u4", count=n_words(n_coords),
+                          offset=off).astype(np.uint32)
+    values = np.frombuffer(data, dtype=np.dtype(dtype).newbyteorder("<"),
+                           count=nnz, offset=off + nb_bitmap).astype(dtype)
+    flags = _unpack_bits(words, n_coords)
+    leaves, pos, vpos = [], 0, 0
+    for shape in spec.shapes:
+        n = int(np.prod(shape))
+        leaf_flags = flags[pos:pos + n]
+        k = int(leaf_flags.sum())
+        leaves.append(PackedSparse(
+            bitmap=jnp.asarray(_pack_bits(leaf_flags)),
+            values=jnp.asarray(values[vpos:vpos + k]),
+            shape=tuple(shape)))
+        pos += n
+        vpos += k
+    if vpos != nnz:
+        raise ValueError(f"frame carries {nnz} values, schema holds {vpos}")
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -1,0 +1,158 @@
+"""``PackedSparse`` — the physical form of a DisPFL message.
+
+One sparsifiable leaf travels as two arrays instead of a dense tensor:
+
+* ``bitmap`` — the {0,1} mask packed 32 coordinates per ``uint32`` word
+  (little-endian bit order: bit ``i % 32`` of word ``i // 32`` is
+  coordinate ``i`` of the flattened leaf),
+* ``values`` — the ``nnz`` held values, contiguous, in coordinate order
+  (fp32 by default; fp16 supported for half-precision payloads).
+
+``unpack(pack(w, m)) == w ⊙ m`` exactly (values are gathered, never
+re-quantized), which is what makes the packed gossip path bit-identical to
+the dense reference.  ``PackedSparse`` is registered as a jax pytree so
+packed trees flow through ``jax.tree.map`` / the engine's payload plumbing
+like any other state.
+
+Packing is an eager (data-dependent-shape) operation: it happens at message
+boundaries, outside jit.  The compute-side consumers are in
+``repro.sparse.ops`` (fused expand/accumulate, with a Pallas kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+BITS_PER_WORD = 32
+
+
+def n_words(n_coords: int) -> int:
+    """uint32 words needed to hold a bitmap over ``n_coords`` coordinates."""
+    return (n_coords + BITS_PER_WORD - 1) // BITS_PER_WORD
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedSparse:
+    """One packed leaf: bitmap words + contiguous nnz values.
+
+    ``shape`` is the dense leaf shape (static aux data, so jit/vmap see it
+    as structure, not as a traced value).
+    """
+
+    bitmap: jax.Array          # (n_words,) uint32
+    values: jax.Array          # (nnz,) fp32 or fp16
+    shape: tuple[int, ...]
+
+    @property
+    def n_coords(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def tree_flatten(self):
+        return (self.bitmap, self.values), (tuple(self.shape),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bitmap, values = children
+        return cls(bitmap=bitmap, values=values, shape=aux[0])
+
+
+def _pack_bits(flags: np.ndarray) -> np.ndarray:
+    """Bool (n,) -> uint32 words (n_words,), little-endian bit order."""
+    flags = np.asarray(flags, dtype=bool).reshape(-1)
+    pad = (-flags.size) % BITS_PER_WORD
+    if pad:
+        flags = np.concatenate([flags, np.zeros(pad, dtype=bool)])
+    words = flags.reshape(-1, BITS_PER_WORD).astype(np.uint32)
+    shifts = np.arange(BITS_PER_WORD, dtype=np.uint32)
+    return (words << shifts).sum(axis=1, dtype=np.uint32)
+
+
+def _unpack_bits(words: np.ndarray, n_coords: int) -> np.ndarray:
+    """uint32 words -> bool (n_coords,), inverse of ``_pack_bits``."""
+    words = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(BITS_PER_WORD, dtype=np.uint32)
+    bits = (words[:, None] >> shifts) & np.uint32(1)
+    return bits.reshape(-1)[:n_coords].astype(bool)
+
+
+def pack(dense: jax.Array, mask: Optional[jax.Array] = None,
+         dtype=None) -> PackedSparse:
+    """Pack one leaf.  ``mask=None`` means dense (all-ones bitmap).
+
+    ``values`` are gathered from ``dense`` at the mask's support, so for a
+    {0,1} mask ``unpack(pack(w, m))`` reconstructs ``w ⊙ m`` bit-exactly.
+    """
+    shape = tuple(dense.shape)
+    flat = np.asarray(dense).reshape(-1)
+    if mask is None:
+        flags = np.ones(flat.size, dtype=bool)
+    else:
+        flags = np.asarray(mask).reshape(-1) != 0
+    vals = flat[flags]
+    if dtype is not None:
+        vals = vals.astype(dtype)
+    return PackedSparse(bitmap=jnp.asarray(_pack_bits(flags)),
+                        values=jnp.asarray(vals), shape=shape)
+
+
+def unpack(ps: PackedSparse) -> jax.Array:
+    """Dense leaf: held values at their coordinates, exact zeros elsewhere."""
+    flags = _unpack_bits(np.asarray(ps.bitmap), ps.n_coords)
+    out = np.zeros(ps.n_coords, dtype=np.asarray(ps.values).dtype)
+    out[flags] = np.asarray(ps.values)
+    return jnp.asarray(out.reshape(ps.shape))
+
+
+def unpack_mask(ps: PackedSparse, dtype=jnp.float32) -> jax.Array:
+    """The {0,1} mask implied by the bitmap (dense leaf shape)."""
+    flags = _unpack_bits(np.asarray(ps.bitmap), ps.n_coords)
+    return jnp.asarray(flags.reshape(ps.shape).astype(dtype))
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedSparse)
+
+
+def pack_tree(params: PyTree, masks: Optional[PyTree] = None,
+              dtype=None) -> PyTree:
+    """Pack every leaf of a parameter pytree (``masks=None`` -> dense)."""
+    if masks is None:
+        return jax.tree.map(lambda w: pack(w, None, dtype), params)
+    return jax.tree.map(lambda w, m: pack(w, m, dtype), params, masks)
+
+
+def unpack_tree(packed: PyTree) -> PyTree:
+    """Dense parameter pytree from a packed one."""
+    return jax.tree.map(unpack, packed, is_leaf=_is_packed)
+
+
+def unpack_mask_tree(packed: PyTree, dtype=jnp.float32) -> PyTree:
+    """Mask pytree ({0,1} floats) from a packed tree's bitmaps."""
+    return jax.tree.map(lambda p: unpack_mask(p, dtype), packed,
+                        is_leaf=_is_packed)
+
+
+def tree_packed_nnz(packed: PyTree) -> int:
+    """Total transmitted values across a packed tree."""
+    return sum(p.nnz for p in jax.tree.leaves(packed, is_leaf=_is_packed))
+
+
+def tree_packed_coords(packed: PyTree) -> int:
+    """Total dense coordinate count across a packed tree."""
+    return sum(p.n_coords
+               for p in jax.tree.leaves(packed, is_leaf=_is_packed))

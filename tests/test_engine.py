@@ -225,12 +225,19 @@ def test_vmap_handles_ragged_batch_schedules(setup):
                                    atol=5e-2)
 
 
-def test_vmap_refuses_momentum(setup):
+def test_vmap_momentum_matches_loop(setup):
+    # momentum rides the stacked fast path as per-client optimizer state,
+    # zero-initialized each local phase exactly like the loop's init_sgd
     task, clients, _ = setup
-    cfg = FLConfig(n_clients=4, rounds=1, local_epochs=1, batch_size=16,
-                   degree=2, momentum=0.9)
-    with pytest.raises(ValueError):
-        run_strategy("dispfl", task, clients, cfg, local_exec="vmap")
+    cfg = FLConfig(n_clients=4, rounds=2, local_epochs=2, batch_size=16,
+                   degree=2, momentum=0.9, eval_every=1)
+    for name in ("dispfl", "dpsgd"):
+        res_loop = run_strategy(name, task, clients, cfg, local_exec="loop")
+        res_vmap = run_strategy(name, task, clients, cfg, local_exec="vmap")
+        np.testing.assert_allclose(res_vmap.final_accs, res_loop.final_accs,
+                                   atol=5e-2)
+        np.testing.assert_allclose(res_vmap.acc_history, res_loop.acc_history,
+                                   atol=5e-2)
 
 
 def test_auto_falls_back_on_heterogeneous(setup):
