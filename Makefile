@@ -1,14 +1,20 @@
 # Repo verification entry points (see ROADMAP.md "Tier-1 verify").
 #
 #   make verify      - full test suite + smoke runs of the launchers
-#   make tier1       - only the tier1-marked fast core tests
-#   make test        - full test suite
+#   make tier1       - tier1-marked fast core tests (excludes `slow`; the
+#                      CI fast job runs this + codec-smoke)
+#   make test        - full test suite (includes slow golden tests)
 #   make sim-smoke   - event-driven async network simulator smoke run
+#                      (lossy links + shared FIFO uplink + retransmits)
 #   make codec-smoke - packed payload codec/gossip benchmark (bytes vs density)
+#   make bench-gate  - benchmark regression gate: fresh codec/vmap/sim rows
+#                      vs benchmarks/baselines/*.json (CI full job; refresh
+#                      deliberately with `python -m benchmarks.check_regression
+#                      --update`)
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test tier1 smoke sim-smoke codec-smoke
+.PHONY: verify test tier1 smoke sim-smoke codec-smoke bench-gate
 
 verify: test smoke sim-smoke codec-smoke
 
@@ -16,7 +22,7 @@ test:
 	$(PY) -m pytest -x -q
 
 tier1:
-	$(PY) -m pytest -x -q -m tier1
+	$(PY) -m pytest -x -q -m "tier1 and not slow"
 
 smoke:
 	$(PY) -m repro.launch.train simulate --strategy dispfl --rounds 2 \
@@ -25,7 +31,11 @@ smoke:
 sim-smoke:
 	$(PY) -m repro.launch.train simulate --sim --async --strategy dispfl \
 	    --rounds 3 --clients 4 --local-epochs 1 --samples-per-class 20 \
-	    --eval-every 3 --staleness 2 --compute-hetero --bandwidth-skew 10
+	    --eval-every 3 --staleness 2 --compute-hetero --bandwidth-skew 10 \
+	    --uplink-mode fifo --loss-prob 0.1 --retransmit-timeout 0.3
 
 codec-smoke:
 	$(PY) -m benchmarks.run --only sparse_codec
+
+bench-gate:
+	$(PY) -m benchmarks.check_regression --out BENCH_latest.json

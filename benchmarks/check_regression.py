@@ -1,0 +1,188 @@
+"""Benchmark regression gate: fresh rows vs checked-in baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--update]
+        [--only sparse_codec,...] [--out BENCH_latest.json]
+
+Runs the gated benchmark modules (codec throughput, engine vmap speedup,
+simulator fault physics), writes every fresh row to ``--out`` (the
+``BENCH_*.json`` artifact CI uploads — the start of the perf trajectory),
+and compares row-by-row against ``benchmarks/baselines/<module>.json``
+under per-metric tolerance rules:
+
+* *virtual* quantities (sim seconds, bytes, accuracies) are deterministic
+  functions of the seed — tight relative tolerances catch real behaviour
+  changes;
+* *wall-clock* quantities (``*_us``, ``*_s_per_round``) vary by machine —
+  only order-of-magnitude blowups fail;
+* *floor* metrics (the vmap speedup) must stay above a fraction of
+  baseline and an absolute floor;
+* boolean sanity checks must match exactly.
+
+``--update`` regenerates the baselines from the fresh run (commit the
+diff deliberately — it is the new performance contract).  Exit status is
+non-zero on any violation, which is what ``make bench-gate`` (run by the
+full CI job) gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+#: modules under the gate (a subset of benchmarks.run.MODULES: the ones
+#: whose rows are stable enough to be a contract)
+MODULES = ["sparse_codec", "engine_vmap", "sim_faults"]
+
+# metric -> rule.  kinds:
+#   close      |new - base| <= atol + rtol * |base|
+#   timing     new <= max_ratio * base (+1us grace) — machine-dependent
+#   floor      new >= max(abs_floor, frac * base)
+#   exact      new == base
+_RULES: dict[str, dict] = {
+    # codec: exact functions of (seed, density) — tight
+    "wire_bytes": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "dense_wire_bytes": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "bytes_ratio": {"kind": "close", "rtol": 0.02, "atol": 0.01},
+    "coords": {"kind": "exact"},
+    "ratio_tracks_density": {"kind": "exact"},
+    # engine: the vmap fast path must keep beating the loop
+    "speedup": {"kind": "floor", "abs_floor": 1.1, "frac": 0.4},
+    "acc_loop": {"kind": "close", "rtol": 0.2, "atol": 0.05},
+    "acc_vmap": {"kind": "close", "rtol": 0.2, "atol": 0.05},
+    # simulator: virtual, deterministic given the seed
+    "sim_wall_s": {"kind": "close", "rtol": 0.25, "atol": 0.5},
+    "sim_s_to_target": {"kind": "close", "rtol": 0.35, "atol": 1.0},
+    "busiest_MB_total": {"kind": "close", "rtol": 0.25, "atol": 0.05},
+    "busiest_MB_at_target": {"kind": "close", "rtol": 0.35, "atol": 0.05},
+    "total_MB": {"kind": "close", "rtol": 0.25, "atol": 0.05},
+    "retrans_MB": {"kind": "close", "rtol": 0.35, "atol": 0.05},
+    "n_retransmits": {"kind": "close", "rtol": 0.35, "atol": 2},
+    "lost_messages": {"kind": "close", "rtol": 0.5, "atol": 2},
+    "final_acc": {"kind": "close", "rtol": 0.25, "atol": 0.05},
+    "uplink_slowdown_x": {"kind": "close", "rtol": 0.25, "atol": 0.1},
+    "lossy_retrans_MB": {"kind": "close", "rtol": 0.35, "atol": 0.05},
+    "clean_retrans_MB": {"kind": "exact"},
+    "same_trajectory": {"kind": "exact"},
+    "fifo_stretches_clock": {"kind": "exact"},
+    # wall-clock: machine noise — catch only blowups
+    "us_per_call": {"kind": "timing", "max_ratio": 8.0},
+    "pack_us": {"kind": "timing", "max_ratio": 8.0},
+    "encode_decode_us": {"kind": "timing", "max_ratio": 8.0},
+    "unpack_us": {"kind": "timing", "max_ratio": 8.0},
+    "gossip_deg3_us": {"kind": "timing", "max_ratio": 8.0},
+    "loop_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+    "vmap_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+}
+
+
+def _check(metric: str, new, base) -> str | None:
+    """Violation message, or None if the metric passes / has no rule."""
+    rule = _RULES.get(metric)
+    if rule is None or isinstance(new, (dict, list, str)):
+        return None
+    kind = rule["kind"]
+    if kind == "exact":
+        if new != base:
+            return f"{metric}: {new!r} != baseline {base!r}"
+        return None
+    new, base = float(new), float(base)
+    if kind == "close":
+        tol = rule["atol"] + rule["rtol"] * abs(base)
+        if abs(new - base) > tol:
+            return (f"{metric}: {new:g} vs baseline {base:g} "
+                    f"(tolerance {tol:g})")
+    elif kind == "timing":
+        if new > rule["max_ratio"] * base + 1.0:
+            return (f"{metric}: {new:g} > {rule['max_ratio']:g}x "
+                    f"baseline {base:g}")
+    elif kind == "floor":
+        floor = max(rule["abs_floor"], rule["frac"] * base)
+        if new < floor:
+            return f"{metric}: {new:g} below floor {floor:g} (baseline {base:g})"
+    return None
+
+
+def run_modules(only: list[str]) -> dict[str, list[dict]]:
+    out = {}
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        out[name] = mod.run(fast=True)
+    return out
+
+
+def compare(module: str, rows: list[dict]) -> list[str]:
+    path = os.path.join(BASELINE_DIR, f"{module}.json")
+    if not os.path.exists(path):
+        return [f"{module}: no baseline at {path} "
+                f"(run with --update and commit it)"]
+    with open(path) as f:
+        base_rows = {r["name"]: r for r in json.load(f)["rows"]}
+    failures = []
+    seen = set()
+    for row in rows:
+        name = row["name"]
+        seen.add(name)
+        base = base_rows.get(name)
+        if base is None:
+            failures.append(f"{name}: row not in baseline (--update?)")
+            continue
+        for metric, new in row.items():
+            if metric == "name":
+                continue
+            msg = _check(metric, new, base.get(metric))
+            if msg:
+                failures.append(f"{name}: {msg}")
+    for missing in sorted(set(base_rows) - seen):
+        failures.append(f"{missing}: baseline row missing from fresh run")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite benchmarks/baselines/*.json from this run")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module subset")
+    ap.add_argument("--out", default="BENCH_latest.json",
+                    help="write all fresh rows here (CI artifact)")
+    args = ap.parse_args()
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    results = run_modules(only)
+    with open(args.out, "w") as f:
+        json.dump({"modules": {m: rows for m, rows in results.items()}},
+                  f, indent=1, default=str)
+    print(f"# wrote {sum(len(r) for r in results.values())} rows "
+          f"to {args.out}")
+
+    if args.update:
+        os.makedirs(BASELINE_DIR, exist_ok=True)
+        for module, rows in results.items():
+            path = os.path.join(BASELINE_DIR, f"{module}.json")
+            with open(path, "w") as f:
+                json.dump({"module": module, "rows": rows}, f, indent=1,
+                          default=str)
+                f.write("\n")
+            print(f"# baseline updated: {path}")
+        return
+
+    failures = []
+    for module, rows in results.items():
+        failures.extend(compare(module, rows))
+    if failures:
+        print(f"# BENCH GATE: {len(failures)} violation(s)", file=sys.stderr)
+        for msg in failures:
+            print(f"#   {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    n = sum(len(r) for r in results.values())
+    print(f"# bench gate OK: {n} rows within tolerance of baselines")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ MODULES = [
     "fig5_masks",        # Fig 5
     "fig6_dropping",     # Fig 6
     "sim_async",         # §Sim: sync vs async wall-clock + busiest-node MB
+    "sim_faults",        # §Sim v2: clean vs lossy vs shared-uplink physics
     "sparse_codec",      # §Sparse: packed payload throughput + bytes vs density
     "engine_vmap",       # §Perf: loop vs vmap local phase at K>=16
     "roofline",          # dry-run roofline aggregation

@@ -1,0 +1,118 @@
+"""Fault-realistic deployment sweep: clean vs lossy vs shared-uplink.
+
+Every scenario runs the same DisPFL training through ``repro.sim.SimEngine``
+on narrow links (so transfer time is visible next to compute) and reports
+virtual time-to-target and busiest-node MB — the paper's deployment axis
+under progressively less idealized networks:
+
+* ``clean``        — v1 physics: per-edge parallel transfers, no loss.
+* ``uplink_fifo``  — a sender's concurrent transfers serialize on its
+  shared uplink (FIFO), stretching every round's arrival tail.
+* ``uplink_fair``  — same uplink, processor-sharing discipline.
+* ``lossy``        — 20% per-link Bernoulli drops with timeout/retransmit;
+  every retransmitted byte is measured on the wire.
+
+Sync rows share one training trajectory (the barrier transport is
+reliable), so their time-to-target differences are *pure network physics*;
+the async rows show how loss + uplink contention shift an actual
+staleness-bounded run.  All quantities are virtual — deterministic given
+the seed — which is what lets ``benchmarks/check_regression.py`` gate them
+tightly in CI.
+"""
+from __future__ import annotations
+
+from benchmarks.common import fl_setup, timer
+
+TARGET_EPS = 1e-9
+
+
+def _scenarios():
+    from repro.sim import LossModel
+
+    return [
+        ("clean", "parallel", None),
+        ("uplink_fifo", "fifo", None),
+        ("uplink_fair", "fair", None),
+        ("lossy", "parallel", LossModel(0.2, timeout_s=0.25, seed=0)),
+    ]
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import make_strategy
+    from repro.sim import LinkModel, LossModel, SimEngine, hetero_speeds
+    from repro.sim.report import time_to_target
+
+    task, clients, cfg = fl_setup(fast, "dirichlet")
+    k = cfg.n_clients
+    speeds = hetero_speeds(k, seed=cfg.seed)
+    links = LinkModel.uniform(k, mbps=2.0, latency_ms=20.0)
+    rows = []
+
+    # --- sync: one trajectory, four network physics ----------------------
+    sync = {}
+    sync_rows = {}
+    for name, uplink, loss in _scenarios():
+        eng = SimEngine(
+            make_strategy("dispfl"), task, clients, cfg, mode="sync",
+            links=links, round_s=1.0, compute_speeds=speeds,
+            uplink=uplink, loss=loss)
+        with timer() as t:
+            eng.run()
+        sync[name] = eng
+        sync_rows[name] = _row(f"sim_faults/sync/{name}", eng, t["s"], cfg)
+        rows.append(sync_rows[name])
+    # all sync runs evaluate identical models — network faults only stretch
+    # the clock, so time-to-target ordering is a pure physics statement
+    target = min(max(a for _, a in e.acc_trace) for e in sync.values())
+    target -= TARGET_EPS
+    for name, eng in sync.items():
+        hit = time_to_target(eng.acc_trace, target)
+        sync_rows[name]["sim_s_to_target"] = round(hit, 3)
+        sync_rows[name]["busiest_MB_at_target"] = (
+            round(eng.stats.busiest_mb_until(hit), 3) if hit >= 0 else -1)
+    t_clean = time_to_target(sync["clean"].acc_trace, target)
+    t_fifo = time_to_target(sync["uplink_fifo"].acc_trace, target)
+    rows.append({
+        "name": "sim_faults/sync/check",
+        "same_trajectory": all(
+            e.acc_trace[-1][1] == sync["clean"].acc_trace[-1][1]
+            for e in sync.values()),
+        "fifo_stretches_clock": t_fifo >= t_clean,
+        "uplink_slowdown_x": round(t_fifo / t_clean, 3) if t_clean > 0 else -1,
+        "lossy_retrans_MB": round(sync["lossy"].stats.retrans_mb, 3),
+        "clean_retrans_MB": round(sync["clean"].stats.retrans_mb, 3),
+    })
+
+    # --- async: faults change what actually arrives ----------------------
+    for name, uplink, loss in (("clean", "parallel", None),
+                               ("lossy_fifo", "fifo",
+                                LossModel(0.2, timeout_s=0.25, seed=0))):
+        eng = SimEngine(
+            make_strategy("dispfl"), task, clients, cfg, mode="async",
+            staleness=2, links=links, round_s=1.0, compute_speeds=speeds,
+            uplink=uplink, loss=loss)
+        with timer() as t:
+            eng.run()
+        row = _row(f"sim_faults/async/{name}", eng, t["s"], cfg)
+        row["lost_messages"] = eng.stats.n_lost
+        rows.append(row)
+    return rows
+
+
+def _row(name: str, eng, wall: float, cfg) -> dict:
+    return {
+        "name": name,
+        "us_per_call": round(wall * 1e6 / max(cfg.rounds, 1)),
+        "sim_wall_s": round(eng.sim_time, 3),
+        "busiest_MB_total": round(eng.stats.busiest_node()[1], 3),
+        "total_MB": round(eng.stats.total_mb, 3),
+        "retrans_MB": round(eng.stats.retrans_mb, 3),
+        "n_retransmits": eng.stats.n_retransmits,
+        "final_acc": round(eng.acc_trace[-1][1], 4) if eng.acc_trace else -1,
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(fast=True))

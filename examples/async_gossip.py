@@ -1,23 +1,32 @@
 """Asynchronous DisPFL on a simulated heterogeneous network — packed payloads.
 
 Eight clients with 0.2x..1.0x compute speeds train decentralized sparse
-models through ``repro.sim.SimEngine``, twice on identical data and links:
+models through ``repro.sim.SimEngine``, three times on identical data:
 
 * synchronous barrier — every round waits for the slowest client,
 * async gossip (staleness <= 2) — fast clients keep training and mix
-  whichever neighbor models have physically arrived.
+  whichever neighbor models have physically arrived,
+* async on *faulty* links — every message risks a 15% Bernoulli drop
+  (resent after a timeout, retransmitted bytes measured on the wire) and
+  each sender's concurrent pushes serialize FIFO on one shared uplink.
 
 Messages are ``repro.sparse`` packed trees (uint32 mask bitmap + the nnz
 values — what DisPFL actually ships), each activation mixes them with the
 O(degree · nnz) ``mix_one`` hook, and every simulated transfer is stamped
-with the exact wire-codec frame size — the busiest-node MB and wall-clock
-below are observed, not assumed.
+with the exact wire-codec frame size — the busiest-node MB, wall-clock and
+retransmit overhead below are observed, not assumed.
 
     PYTHONPATH=src python examples/async_gossip.py
 """
 from repro.data import build_federated_image_task
 from repro.fl import FLConfig, make_cnn_task, make_strategy
-from repro.sim import LinkModel, SimEngine, hetero_speeds, measure_payload
+from repro.sim import (
+    LinkModel,
+    LossModel,
+    SimEngine,
+    hetero_speeds,
+    measure_payload,
+)
 from repro.sim.report import time_to_target
 from repro.utils.tree import tree_bytes
 
@@ -35,10 +44,18 @@ links = LinkModel.uniform(K, mbps=50, latency_ms=20)
 print(f"clients={K} speeds={[round(float(s), 1) for s in speeds]}")
 
 engines = {
-    mode: SimEngine(make_strategy("dispfl"), task, clients, cfg,
-                    mode=mode, staleness=staleness, links=links,
-                    round_s=1.0, compute_speeds=speeds)
-    for mode, staleness in (("sync", 0), ("async", 2))}
+    "sync": SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                      mode="sync", links=links, round_s=1.0,
+                      compute_speeds=speeds),
+    "async": SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                       mode="async", staleness=2, links=links,
+                       round_s=1.0, compute_speeds=speeds),
+    "lossy": SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                       mode="async", staleness=2, links=links,
+                       round_s=1.0, compute_speeds=speeds,
+                       uplink="fifo",
+                       loss=LossModel(0.15, timeout_s=0.25, seed=0)),
+}
 
 # what one message physically is: the codec frame of a packed sparse tree
 payload = engines["sync"].strategy.snapshot_message(engines["sync"].state, 0)
@@ -66,3 +83,12 @@ for mode, eng in engines.items():
 print(f"async observed staleness spread: "
       f"{engines['async'].observed_spread} rounds "
       f"(bound {engines['async'].staleness})")
+
+# the price of unreliable links, measured from what was actually resent
+lossy = engines["lossy"].stats
+clean = engines["async"].stats
+print(f"lossy links: {lossy.n_retransmits} retransmits = "
+      f"{lossy.retrans_mb:.3f}MB extra on the wire "
+      f"({lossy.retrans_mb / lossy.total_mb:.0%} of its "
+      f"{lossy.total_mb:.2f}MB total; clean async moved "
+      f"{clean.total_mb:.2f}MB), {lossy.n_lost} message(s) lost for good")

@@ -1,1 +1,2 @@
 from repro.checkpoint.npz import load_pytree, save_pytree, save_clients, load_clients  # noqa: F401
+from repro.checkpoint.packed import decode_packed, encode_packed  # noqa: F401

@@ -1,0 +1,62 @@
+"""Checkpointing sparse message payloads: PackedSparse <-> plain arrays.
+
+``repro.checkpoint.npz`` stores pytrees of *arrays*; an in-flight simulator
+message, however, is a tree of ``PackedSparse`` leaves (uint32 bitmap + nnz
+values + a static dense shape).  ``encode_packed`` rewrites every
+``PackedSparse`` into a marked plain-dict so the tree survives the
+flat-path .npz round trip; ``decode_packed`` is the exact inverse.  The
+bitmap and value arrays are stored verbatim — no re-quantization, no
+re-packing — so a resumed simulation mixes bit-identical payloads.
+
+This is what lets ``SimEngine.save`` persist a *mid-run* asynchronous
+simulation: the pending event queue and per-client inboxes hold exactly
+these payload trees.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.packed import PackedSparse, _is_packed
+
+PyTree = Any
+
+_PACKED_KEY = "__packed_sparse__"
+
+
+def encode_packed(tree: PyTree) -> PyTree:
+    """Replace every ``PackedSparse`` leaf with a marked plain-array dict
+    (checkpointable); non-packed leaves pass through untouched."""
+
+    def enc(x):
+        if _is_packed(x):
+            return {_PACKED_KEY: {
+                "bitmap": np.asarray(x.bitmap),
+                "values": np.asarray(x.values),
+                "shape": np.asarray(x.shape, dtype=np.int64),
+            }}
+        return x
+
+    return jax.tree.map(enc, tree, is_leaf=_is_packed)
+
+
+def _is_marker(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {_PACKED_KEY}
+
+
+def decode_packed(tree: PyTree) -> PyTree:
+    """Inverse of ``encode_packed`` (bitmap/values restored verbatim)."""
+
+    def dec(x):
+        if _is_marker(x):
+            d = x[_PACKED_KEY]
+            return PackedSparse(
+                bitmap=jnp.asarray(np.asarray(d["bitmap"], dtype=np.uint32)),
+                values=jnp.asarray(d["values"]),
+                shape=tuple(int(s) for s in np.asarray(d["shape"])))
+        return x
+
+    return jax.tree.map(dec, tree, is_leaf=_is_marker)

@@ -457,9 +457,10 @@ class RoundEngine:
         self._stop = True
 
     # -- checkpointing -----------------------------------------------------
-    def save(self, path: str) -> None:
-        from repro.checkpoint import save_pytree
-        payload = {
+    def _checkpoint_payload(self) -> dict:
+        """The full serializable engine state (subclasses extend it — the
+        network simulator adds its virtual timeline under a "sim" key)."""
+        return {
             "engine": {
                 "next_round": np.asarray(self._next_round, np.int64),
                 "acc_history": np.asarray(self._acc_history, np.float64),
@@ -472,13 +473,12 @@ class RoundEngine:
             },
             "state": _pack(self.state),
         }
-        save_pytree(path, payload)
 
-    def restore(self, path: str) -> "RoundEngine":
-        """Load a checkpoint written by ``save``; resumes bit-identically
-        (all rng is derived from (seed, round, client), never carried)."""
-        from repro.checkpoint import load_pytree
-        payload = load_pytree(path)
+    def save(self, path: str) -> None:
+        from repro.checkpoint import save_pytree
+        save_pytree(path, self._checkpoint_payload())
+
+    def _restore_payload(self, payload: dict) -> None:
         eng = payload["engine"]
         self._next_round = int(eng["next_round"])
         self._acc_history = [float(a) for a in np.asarray(eng["acc_history"])]
@@ -488,7 +488,18 @@ class RoundEngine:
                       for k, v in eng["comm"].items()}
         self._flops = {k: [float(x) for x in np.asarray(v)]
                        for k, v in eng["flops"].items()}
-        self.state = _unpack(payload["state"])
+        self.state = jax.tree.map(jnp.asarray, _unpack(payload["state"]))
+
+    def restore(self, path: str) -> "RoundEngine":
+        """Load a checkpoint written by ``save``; resumes bit-identically
+        (all rng is derived from (seed, round, client), never carried).
+
+        The archive is loaded as numpy (float64 metric histories and the
+        simulator's virtual timeline must round-trip exactly; a jnp detour
+        would truncate them to float32 under the x32 default) and only the
+        strategy state is moved to device arrays."""
+        from repro.checkpoint import load_pytree
+        self._restore_payload(load_pytree(path, as_jnp=False))
         return self
 
     # -- the round loop ----------------------------------------------------

@@ -66,27 +66,39 @@ def run_simulate(args) -> dict:
     if args.sim:
         from repro.sim import (
             AlwaysUp,
+            BandwidthTrace,
             BernoulliAvailability,
             LinkModel,
+            LossModel,
             SimEngine,
             hetero_speeds,
         )
+        trace = (BandwidthTrace.from_json(args.bandwidth_trace)
+                 if args.bandwidth_trace else None)
         links = (LinkModel.skewed(args.clients, args.bandwidth_mbps,
                                   args.bandwidth_skew,
-                                  latency_ms=args.latency_ms, seed=args.seed)
+                                  latency_ms=args.latency_ms, seed=args.seed,
+                                  trace=trace)
                  if args.bandwidth_skew > 1.0 else
                  LinkModel.uniform(args.clients, args.bandwidth_mbps,
-                                   args.latency_ms))
+                                   args.latency_ms, trace=trace))
         avail = (BernoulliAvailability(args.clients, args.drop_prob, args.seed)
                  if args.drop_prob > 0 else AlwaysUp(args.clients))
         speeds = (hetero_speeds(args.clients, seed=args.seed)
                   if args.compute_hetero else None)
+        loss = (LossModel(args.loss_prob, args.retransmit_timeout,
+                          seed=args.seed)
+                if args.loss_prob > 0 else None)
+        if args.sim_checkpoint:
+            callbacks.append(Checkpointer(args.sim_checkpoint,
+                                          every=args.checkpoint_every))
         engine = SimEngine(
             make_strategy(args.strategy), task, clients, cfg,
             callbacks=callbacks, local_exec=args.local_exec,
             mode="async" if args.sim_async else "sync",
             staleness=args.staleness, links=links, availability=avail,
-            round_s=args.round_s, compute_speeds=speeds)
+            round_s=args.round_s, compute_speeds=speeds,
+            uplink=args.uplink_mode, loss=loss)
     else:
         engine = RoundEngine(make_strategy(args.strategy), task, clients, cfg,
                              callbacks=callbacks, local_exec=args.local_exec)
@@ -277,6 +289,32 @@ def main() -> None:
     sim.add_argument("--round-s", type=float, default=None, dest="round_s",
                      help="virtual seconds a full-speed client spends per "
                           "round (default 1.0)")
+    # fault realism (sim v2)
+    sim.add_argument("--loss-prob", type=float, default=None,
+                     dest="loss_prob",
+                     help="per-link Bernoulli message drop probability "
+                          "(retransmitted after --retransmit-timeout; every "
+                          "attempt's bytes are counted on the wire)")
+    sim.add_argument("--retransmit-timeout", type=float, default=None,
+                     dest="retransmit_timeout",
+                     help="virtual seconds the sender waits before resending "
+                          "a dropped message (default 0.5)")
+    sim.add_argument("--uplink-mode", default=None, dest="uplink_mode",
+                     choices=["parallel", "fifo", "fair"],
+                     help="shared-uplink discipline: parallel = idealized "
+                          "per-edge links (default), fifo/fair serialize a "
+                          "sender's concurrent transfers on one uplink")
+    sim.add_argument("--bandwidth-trace", default=None,
+                     dest="bandwidth_trace",
+                     help='JSON file {"times": [...], "scale": [...]} of '
+                          "time-varying bandwidth multipliers (scale rows "
+                          "scalar or per-client)")
+    sim.add_argument("--sim-checkpoint", default="", dest="sim_checkpoint",
+                     help="save the full simulator state (virtual clock, "
+                          "event queue, link stats) to this .npz every "
+                          "--checkpoint-every rounds; resume with --resume "
+                          "(--checkpoint writes the same archive under "
+                          "--sim; this alias just keeps sim runs explicit)")
 
     lm = sub.add_parser("lm")
     lm.add_argument("--arch", default="qwen3-8b")
@@ -302,13 +340,16 @@ def main() -> None:
                         "--bandwidth-skew": args.bandwidth_skew is not None,
                         "--latency-ms": args.latency_ms is not None,
                         "--compute-hetero": args.compute_hetero,
-                        "--round-s": args.round_s is not None}
+                        "--round-s": args.round_s is not None,
+                        "--loss-prob": args.loss_prob is not None,
+                        "--retransmit-timeout":
+                            args.retransmit_timeout is not None,
+                        "--uplink-mode": args.uplink_mode is not None,
+                        "--bandwidth-trace": args.bandwidth_trace is not None,
+                        "--sim-checkpoint": bool(args.sim_checkpoint)}
             used = [f for f, on in sim_only.items() if on]
             if used:
                 ap.error(f"{', '.join(used)} require(s) --sim")
-        elif args.resume:
-            ap.error("--sim cannot --resume: the virtual timeline is not "
-                     "checkpointed (rerun the simulation instead)")
         # resolve sim defaults after the guard above (`is None`, never `or`:
         # an explicit 0 must reach the models' own validation, not be
         # silently replaced by the default)
@@ -319,6 +360,11 @@ def main() -> None:
                                else args.bandwidth_skew)
         args.latency_ms = 10.0 if args.latency_ms is None else args.latency_ms
         args.round_s = 1.0 if args.round_s is None else args.round_s
+        args.loss_prob = 0.0 if args.loss_prob is None else args.loss_prob
+        args.retransmit_timeout = (0.5 if args.retransmit_timeout is None
+                                   else args.retransmit_timeout)
+        args.uplink_mode = ("parallel" if args.uplink_mode is None
+                            else args.uplink_mode)
         if args.sim and args.bandwidth_skew < 1.0:
             ap.error("--bandwidth-skew must be >= 1 (1 = uniform links)")
         run_simulate(args)

@@ -8,14 +8,21 @@ asynchronous gossip beat the synchronous barrier?
 Modules
 -------
 ``events``        event queue, virtual clock, per-client compute speeds
-``links``         per-edge bandwidth/latency models + measured bytes-on-wire
+``links``         per-edge bandwidth/latency models (time-varying via
+                  ``BandwidthTrace``), shared-uplink scheduling
+                  (``UplinkScheduler``: parallel/fifo/fair), Bernoulli
+                  message loss + retransmit (``LossModel``), and measured
+                  bytes-on-wire (retransmitted bytes included)
 ``availability``  Bernoulli / trace-driven client up-down schedules (shared
                   with the fig-6 dropping experiment)
 ``async_engine``  ``SimEngine`` — drives the existing Strategy hooks in a
                   synchronous (bit-identical to ``RoundEngine``) or
-                  staleness-bounded asynchronous regime
+                  staleness-bounded asynchronous regime; checkpoint/resume
+                  of the *complete* simulation (clock, event queue,
+                  in-flight payloads, link stats) is bit-identical to an
+                  uninterrupted run in both modes
 ``report``        wall-clock-to-target, busiest-node timelines, per-link
-                  utilization, JSON-lines streaming
+                  utilization, retransmit overhead, JSON-lines streaming
 
 See the ``async_engine`` module docstring for a worked example, and
 ``examples/async_gossip.py`` for a runnable one.
@@ -34,6 +41,13 @@ from repro.sim.events import (  # noqa: F401
     VirtualClock,
     hetero_speeds,
 )
-from repro.sim.links import LinkModel, LinkStats, measure_payload  # noqa: F401
+from repro.sim.links import (  # noqa: F401
+    BandwidthTrace,
+    LinkModel,
+    LinkStats,
+    LossModel,
+    UplinkScheduler,
+    measure_payload,
+)
 from repro.sim.async_engine import SimEngine, SimRoundMetrics  # noqa: F401
 from repro.sim.report import MetricsStream, SimReport, build_report  # noqa: F401

@@ -1,4 +1,4 @@
-"""Event-driven simulator for decentralized sparse training.
+"""Event-driven simulator for decentralized sparse training (fault-realistic).
 
 ``SimEngine`` drives the *existing* ``Strategy`` hook classes (no strategy
 changes) through a discrete-event timeline with per-edge link models
@@ -25,11 +25,37 @@ client up/down schedules (``sim.availability``).  Two modes:
   than the bound are not mixed; ``staleness < 0`` is fully asynchronous.
   ``staleness=0`` degenerates to a barrier.
 
+Fault realism (v2):
+
+* **Shared uplinks** — ``uplink="fifo"`` / ``"fair"`` serializes a sender's
+  concurrent transfers on one uplink (``sim.links.UplinkScheduler``)
+  instead of running every edge in parallel, which stretches busiest-node
+  timelines exactly where the paper's headline metric lives.
+* **Message loss + retransmit** — a ``sim.links.LossModel`` drops messages
+  per-link with derived-rng Bernoulli draws; the sender retransmits after a
+  timeout and every attempt's bytes are measured on the wire.  In sync mode
+  the barrier's transport is *reliable*: the drop draws only decide how
+  many transmissions the timeline and byte counters record (state evolution
+  stays bit-identical to ``RoundEngine``); in async mode a message that
+  exhausts its retransmit budget is really lost — the receiver just never
+  mixes it.
+* **Trace-driven bandwidth** — a ``sim.links.BandwidthTrace`` on the
+  ``LinkModel`` scales link rates over virtual time.
+* **Checkpoint/resume** — ``save``/``restore`` round-trip the *complete*
+  simulation through ``repro.checkpoint``: virtual clock, pending event
+  queue (with in-flight packed payloads), per-client local clocks and
+  inboxes, ``LinkStats``, uplink busy-until state and accuracy traces.  A
+  run checkpointed at any round (sync) or any emitted round mid-event-loop
+  (async) and resumed is bit-identical to the uninterrupted run — every
+  tie-break survives because event insertion sequences are persisted, and
+  all randomness (training, topology, loss) is derived per (seed, ...)
+  rather than carried in generator objects.
+
 Worked example::
 
     from repro.fl import FLConfig, make_cnn_task, make_strategy
     from repro.data import build_federated_image_task
-    from repro.sim import ComputeModel, LinkModel, SimEngine
+    from repro.sim import ComputeModel, LinkModel, LossModel, SimEngine
 
     clients, _ = build_federated_image_task(0, n_clients=8)
     task = make_cnn_task("smallcnn")
@@ -37,7 +63,8 @@ Worked example::
     eng = SimEngine(make_strategy("dispfl"), task, clients, cfg,
                     mode="async", staleness=2,
                     links=LinkModel.skewed(8, mbps=100, skew=10),
-                    compute=ComputeModel.heterogeneous(8))
+                    compute=ComputeModel.heterogeneous(8),
+                    uplink="fifo", loss=LossModel(0.1, timeout_s=0.5))
     for m in eng.rounds():          # SimRoundMetrics: acc + virtual time
         print(m.round, m.acc_mean, m.sim_time_s)
     print(eng.report().to_dict())   # wall-clock-to-target, busiest node, ...
@@ -45,12 +72,12 @@ Worked example::
 Determinism: all training randomness is derived per (seed, local round,
 client) exactly as in ``RoundEngine``; event ties break on insertion order;
 there is no wall-clock anywhere in the virtual timeline — a simulation is a
-pure function of (strategy, data, cfg, links, compute, availability).
+pure function of (strategy, data, cfg, links, compute, availability, loss).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -63,6 +90,8 @@ from repro.fl.engine import (
     RoundEngine,
     RoundMetrics,
     StrategyBase,
+    _pack,
+    _unpack,
 )
 from repro.sim.availability import AlwaysUp, Availability
 from repro.sim.events import (
@@ -70,11 +99,24 @@ from repro.sim.events import (
     DONE,
     WAKE,
     ComputeModel,
+    Event,
     EventQueue,
     VirtualClock,
 )
-from repro.sim.links import MB, LinkModel, LinkStats, measure_payload
+from repro.sim.links import (
+    MB,
+    LinkModel,
+    LinkStats,
+    LossModel,
+    UplinkScheduler,
+    measure_payload,
+)
 from repro.sim.report import SimReport, build_report
+
+_KIND_CODES = {WAKE: 0, ARRIVAL: 1, DONE: 2}
+_CODE_KINDS = {v: k for k, v in _KIND_CODES.items()}
+_MODE_CODES = {"sync": 0, "async": 1}
+_SIM_CKPT_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -88,6 +130,8 @@ class SimRoundMetrics(RoundMetrics):
     busiest_down_mb: float = 0.0
     min_round: int = 0               # async: slowest / fastest client rounds
     max_round: int = 0
+    retrans_mb: float = 0.0          # cumulative retransmitted value-MB
+    lost_messages: int = 0           # cumulative undelivered messages (async)
 
 
 @dataclasses.dataclass
@@ -101,6 +145,24 @@ class _Message:
     payload: dict       # StrategyBase.snapshot_message
 
 
+@dataclasses.dataclass
+class _AsyncState:
+    """The complete mutable state of one asynchronous event loop — held on
+    the engine (not in generator locals) so ``save`` can serialize a
+    *mid-run* simulation and ``restore`` can resume it bit-identically."""
+    q: EventQueue
+    inbox: list                      # per client: {src: _Message}
+    t_local: np.ndarray              # completed local rounds per client
+    down_count: np.ndarray           # total down slots (slot offset)
+    down_streak: np.ndarray          # consecutive down retries
+    waiting: set                     # SSP-blocked clients
+    done: set
+    dead: set                        # exhausted max_down_retries
+    emitted: int = 0                 # global rounds yielded so far
+    last_finish: float = 0.0
+    prev_snap: Optional[dict] = None # LinkStats snapshot at last emission
+
+
 class SimEngine(RoundEngine):
     """Discrete-event wrapper around the Strategy hook protocol."""
 
@@ -112,7 +174,9 @@ class SimEngine(RoundEngine):
                  availability: Optional[Availability] = None,
                  round_s: Optional[float] = None,
                  compute_speeds: Optional[np.ndarray] = None,
-                 max_down_retries: int = 100):
+                 max_down_retries: int = 100,
+                 uplink: str = "parallel",
+                 loss: Optional[LossModel] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode}")
         super().__init__(strategy, task, clients, cfg,
@@ -125,6 +189,8 @@ class SimEngine(RoundEngine):
         self.max_down_retries = int(max_down_retries)
         self.links = links or LinkModel.uniform(n)
         self.availability = availability or AlwaysUp(n)
+        self.uplink = UplinkScheduler(n, uplink)
+        self.loss = loss
         if compute is None:
             if round_s is not None:
                 # anchor the timescale: a speed-1.0 client does one local
@@ -145,6 +211,7 @@ class SimEngine(RoundEngine):
         self.observed_mix_lag = 0         # max version lag actually mixed
         self.mixed_messages = 0           # neighbor models mixed over the run
         self._pending_edges = None        # sync: this round's message sizes
+        self._as: Optional[_AsyncState] = None   # async event-loop state
 
     # ------------------------------------------------------------------
     # shared
@@ -158,15 +225,6 @@ class SimEngine(RoundEngine):
         ctx = self._make_ctx(0)
         return float(self.strategy.round_flops(self.state, ctx).per_round_flops)
 
-    def restore(self, path: str):
-        # engine checkpoints carry no virtual clock / link stats / accuracy
-        # trace, so a resumed simulation would silently report wrong
-        # deployment numbers — refuse rather than mislead
-        raise NotImplementedError(
-            "SimEngine does not support checkpoint resume (the virtual "
-            "timeline is not checkpointed); rerun the simulation or resume "
-            "with RoundEngine")
-
     def report(self, targets: Sequence[float] = ()) -> SimReport:
         return build_report(self.mode, self.stats, self.acc_trace,
                             self.clock.now, targets)
@@ -175,6 +233,200 @@ class SimEngine(RoundEngine):
         if alive is None and not self.availability.always_up:
             alive = self.availability.alive(t)
         return super()._make_ctx(t, alive=alive)
+
+    # ------------------------------------------------------------------
+    # transfers: shared uplink + loss/retransmit (both modes)
+    # ------------------------------------------------------------------
+    def _transmit(self, src: int, jobs: list[tuple[int, float, float]],
+                  t_request: float, tag: int,
+                  reliable: bool) -> list[tuple[int, bool, float]]:
+        """Put ``jobs`` = [(dst, value_bytes, wire_bytes), ...] on ``src``'s
+        uplink at ``t_request``; apply the loss model per edge, scheduling
+        each retransmit ``timeout_s`` after the previous attempt left the
+        uplink.  Every attempt is recorded in ``LinkStats``.  Returns one
+        (dst, delivered, t_last_arrival) per job; with ``reliable=True``
+        (sync barrier) the final attempt always delivers."""
+        slots = self.uplink.schedule(
+            self.links, src, [(d, w) for d, _v, w in jobs], t_request)
+        out = []
+        for (dst, bytes_v, bytes_w), (t_start, t_end) in zip(jobs, slots):
+            attempts, delivered = (self.loss.attempts(src, dst, tag)
+                                   if self.loss is not None else (1, True))
+            self.stats.record(src, dst, bytes_v, bytes_w, t_start, t_end,
+                              attempt=0)
+            end = t_end
+            for a in range(1, attempts):
+                t_retry = (end - float(self.links.latency_s[src, dst])
+                           + self.loss.timeout_s)
+                (t2, e2), = self.uplink.schedule(
+                    self.links, src, [(dst, bytes_w)], t_retry)
+                self.stats.record(src, dst, bytes_v, bytes_w, t2, e2,
+                                  attempt=a)
+                end = e2
+            if reliable:
+                delivered = True
+            if not delivered:
+                self.stats.record_lost(src, dst)
+            out.append((dst, delivered, end))
+        return out
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume
+    # ------------------------------------------------------------------
+    def _checkpoint_payload(self) -> dict:
+        payload = super()._checkpoint_payload()
+        sim = {
+            "version": np.asarray(_SIM_CKPT_VERSION, np.int64),
+            "mode": np.asarray(_MODE_CODES[self.mode], np.int64),
+            "clock_now": np.asarray(self.clock.now, np.float64),
+            "acc_trace": np.asarray(self.acc_trace,
+                                    np.float64).reshape(-1, 2),
+            "observed": np.asarray(
+                [self.observed_spread, self.observed_mix_lag,
+                 self.mixed_messages], np.int64),
+            "uplink": self.uplink.state_dict(),
+            "stats": self.stats.state_dict(),
+        }
+        if self._as is not None:
+            sim["async"] = self._pack_async_state(self._as)
+        payload["sim"] = sim
+        return payload
+
+    def _restore_payload(self, payload: dict) -> None:
+        if "sim" not in payload:
+            raise ValueError(
+                "not a SimEngine checkpoint (no virtual timeline inside); "
+                "resume it with RoundEngine, or re-save through SimEngine")
+        super()._restore_payload(payload)
+        sim = payload["sim"]
+        ck_mode = int(sim["mode"])
+        if ck_mode != _MODE_CODES[self.mode]:
+            names = {v: k for k, v in _MODE_CODES.items()}
+            raise ValueError(
+                f"checkpoint was written by a mode={names[ck_mode]!r} "
+                f"simulation; this engine is mode={self.mode!r}")
+        self.clock = VirtualClock()
+        self.clock.advance_to(float(sim["clock_now"]))
+        trace = np.asarray(sim["acc_trace"], dtype=np.float64).reshape(-1, 2)
+        self.acc_trace = [(float(t), float(a)) for t, a in trace]
+        obs = np.asarray(sim["observed"], dtype=np.int64)
+        self.observed_spread = int(obs[0])
+        self.observed_mix_lag = int(obs[1])
+        self.mixed_messages = int(obs[2])
+        self.uplink.load_state(sim["uplink"])
+        self.stats.load_state(sim["stats"])
+        if self.mode == "async":
+            if "async" not in sim:
+                raise ValueError(
+                    "async checkpoint is missing its event-loop state")
+            self._as = self._unpack_async_state(sim["async"])
+
+    def _pack_async_state(self, st: _AsyncState) -> dict:
+        from repro.checkpoint import encode_packed
+        n = len(self.clients)
+        events = st.q.pending()
+        # one push shares a single payload object across up to `degree`
+        # ARRIVAL events and inbox slots — serialize each unique payload
+        # once (pool index by object identity) instead of per occurrence
+        pool: dict = {}
+        pool_ids: dict[int, int] = {}
+
+        def payload_ref(payload: dict) -> int:
+            idx = pool_ids.get(id(payload))
+            if idx is None:
+                idx = len(pool_ids)
+                pool_ids[id(payload)] = idx
+                pool[f"{idx:06d}"] = _pack(encode_packed(payload))
+            return idx
+
+        ev = {
+            "time": np.asarray([e.time for e in events], np.float64),
+            "seq": np.asarray([e.seq for e in events], np.int64),
+            "kind": np.asarray([_KIND_CODES[e.kind] for e in events],
+                               np.int64),
+            "k": np.asarray([e.data["k"] for e in events], np.int64),
+            "src": np.asarray([e.data.get("src", -1) for e in events],
+                              np.int64),
+            "msg_version": np.asarray(
+                [e.data["msg"].version if "msg" in e.data else -1
+                 for e in events], np.int64),
+            "msg_payload": np.asarray(
+                [payload_ref(e.data["msg"].payload) if "msg" in e.data
+                 else -1 for e in events], np.int64),
+        }
+        inbox = {}
+        for k in range(n):
+            slot = {}
+            for j, msg in st.inbox[k].items():
+                slot[f"{j:04d}"] = {
+                    "v": np.asarray(msg.version, np.int64),
+                    "pid": np.asarray(payload_ref(msg.payload), np.int64),
+                }
+            inbox[f"{k:04d}"] = slot
+        flags = np.zeros((3, n), dtype=bool)
+        for row, group in enumerate((st.waiting, st.done, st.dead)):
+            for k in group:
+                flags[row, k] = True
+        return {
+            "events": ev,
+            "payloads": pool,
+            "inbox": inbox,
+            "t_local": st.t_local.astype(np.int64),
+            "down_count": st.down_count.astype(np.int64),
+            "down_streak": st.down_streak.astype(np.int64),
+            "flags": flags,
+            "emitted": np.asarray(st.emitted, np.int64),
+            "last_finish": np.asarray(st.last_finish, np.float64),
+            "prev_snap": {k: np.asarray(v, np.float64)
+                          for k, v in (st.prev_snap or {}).items()},
+        }
+
+    def _unpack_async_state(self, d: dict) -> _AsyncState:
+        from repro.checkpoint import decode_packed
+        n = len(self.clients)
+        ev = d["events"]
+        times = np.asarray(ev["time"], np.float64)
+        seqs = np.asarray(ev["seq"], np.int64)
+        kinds = np.asarray(ev["kind"], np.int64)
+        ks = np.asarray(ev["k"], np.int64)
+        srcs = np.asarray(ev["src"], np.int64)
+        versions = np.asarray(ev["msg_version"], np.int64)
+        pids = np.asarray(ev["msg_payload"], np.int64)
+        # decode the payload pool once; every referencing event/inbox slot
+        # shares the decoded object, exactly like the live broadcast did
+        pool = {int(key): decode_packed(_unpack(tree))
+                for key, tree in d.get("payloads", {}).items()}
+        events = []
+        for i in range(len(times)):
+            data = {"k": int(ks[i])}
+            if int(kinds[i]) == _KIND_CODES[ARRIVAL]:
+                data["src"] = int(srcs[i])
+                data["msg"] = _Message(version=int(versions[i]),
+                                       payload=pool[int(pids[i])])
+            events.append(Event(float(times[i]), int(seqs[i]),
+                                _CODE_KINDS[int(kinds[i])], data))
+        q = EventQueue()
+        q.restore(events)
+        inbox: list[dict[int, _Message]] = [dict() for _ in range(n)]
+        for k_key, slot in d.get("inbox", {}).items():
+            for j_key, msg in slot.items():
+                inbox[int(k_key)][int(j_key)] = _Message(
+                    version=int(msg["v"]),
+                    payload=pool[int(msg["pid"])])
+        flags = np.asarray(d["flags"], dtype=bool)
+        snap = {k: np.asarray(v, np.float64)
+                for k, v in d.get("prev_snap", {}).items()}
+        return _AsyncState(
+            q=q, inbox=inbox,
+            t_local=np.asarray(d["t_local"], np.int64).copy(),
+            down_count=np.asarray(d["down_count"], np.int64).copy(),
+            down_streak=np.asarray(d["down_streak"], np.int64).copy(),
+            waiting=set(np.flatnonzero(flags[0]).tolist()),
+            done=set(np.flatnonzero(flags[1]).tolist()),
+            dead=set(np.flatnonzero(flags[2]).tolist()),
+            emitted=int(d["emitted"]),
+            last_finish=float(d["last_finish"]),
+            prev_snap=snap or None)
 
     # ------------------------------------------------------------------
     # sync mode: RoundEngine semantics + a virtual timeline
@@ -198,20 +450,25 @@ class SimEngine(RoundEngine):
         edges = self._pending_edges
         self._pending_edges = None
         t0 = self.clock.now
+        n = len(self.clients)
         compute_s = np.array([
             self.compute.local_time(k, metrics.flops_round)
-            for k in range(len(self.clients))])
-        send_end = np.zeros(len(self.clients))
+            for k in range(n)])
+        dur = float(compute_s.max()) if n else 0.0
         if edges is not None:
             edges_v, edges_w = edges
-            for dst, src in zip(*np.nonzero(edges_v)):
-                start = t0 + compute_s[src]
-                end = start + self.links.transfer_time(
-                    edges_w[dst, src], src, dst)
-                self.stats.record(src, dst, edges_v[dst, src],
-                                  edges_w[dst, src], start, end)
-                send_end[src] = max(send_end[src], end - t0)
-        dur = float(np.maximum(compute_s, send_end).max()) if len(compute_s) else 0.0
+            for src in range(n):
+                dsts = np.flatnonzero(edges_v[:, src])
+                if dsts.size == 0:
+                    continue
+                jobs = [(int(d), float(edges_v[d, src]),
+                         float(edges_w[d, src])) for d in dsts]
+                # the barrier waits for every model to arrive — the round
+                # ends at the last arrival (retransmits included; sync
+                # transport is reliable, so state matches RoundEngine)
+                for _dst, _ok, end in self._transmit(
+                        src, jobs, t0 + compute_s[src], ctx.t, reliable=True):
+                    dur = max(dur, end - t0)
         self.clock.advance_to(t0 + dur)
         if metrics.acc_mean is not None:
             self.acc_trace.append((self.clock.now, metrics.acc_mean))
@@ -221,7 +478,9 @@ class SimEngine(RoundEngine):
             sim_time_s=self.clock.now, sim_round_s=dur,
             measured_total_mb=self.stats.total_mb,
             busiest_up_mb=float(up.max()), busiest_down_mb=float(down.max()),
-            min_round=ctx.t + 1, max_round=ctx.t + 1)
+            min_round=ctx.t + 1, max_round=ctx.t + 1,
+            retrans_mb=self.stats.retrans_mb,
+            lost_messages=self.stats.n_lost)
 
     # ------------------------------------------------------------------
     # async mode
@@ -244,13 +503,95 @@ class SimEngine(RoundEngine):
         self.strategy.mix_one(
             self.state, k, {j: m.payload for j, m in senders.items()}, ctx)
 
+    def _fresh_async_state(self) -> _AsyncState:
+        n = len(self.clients)
+        st = _AsyncState(
+            q=EventQueue(),
+            inbox=[dict() for _ in range(n)],
+            t_local=np.zeros(n, dtype=np.int64),
+            down_count=np.zeros(n, dtype=np.int64),
+            down_streak=np.zeros(n, dtype=np.int64),
+            waiting=set(), done=set(), dead=set(),
+            emitted=0, last_finish=0.0,
+            prev_snap=self.stats.snapshot())
+        for k in range(n):
+            st.q.push(0.0, WAKE, k=k)
+        return st
+
+    def _live_floor(self, st: _AsyncState) -> int:
+        """Slowest *participating* client's completed rounds — dead clients
+        (permanently unavailable) stop bounding progress.  With nobody left
+        alive no further progress is possible, so the floor freezes at the
+        rounds already emitted (the run ends partial rather than
+        fabricating untrained rounds)."""
+        n = len(self.clients)
+        alive_t = [int(st.t_local[i]) for i in range(n) if i not in st.dead]
+        return min(alive_t) if alive_t else st.emitted
+
+    def _emit_ready_rounds(self, st: _AsyncState) -> Iterator[SimRoundMetrics]:
+        """Yield one SimRoundMetrics per newly completed global round (a
+        round is complete once the slowest client passes it).  All counters
+        — ``emitted``, ``prev_snap``, ``_next_round``, accuracy history —
+        advance *before* each yield, so a checkpoint taken from a round's
+        callback captures exactly "rounds <= t complete" and a resumed run
+        re-emits any rounds still pending at the cut."""
+        cfg = self.cfg
+        strat = self.strategy
+        while st.emitted < self._live_floor(st):
+            t = st.emitted
+            ctx = self._make_ctx(t)
+            comm_sn = self.stats.snapshot()
+            prev = st.prev_snap or {k: np.zeros_like(v)
+                                    for k, v in comm_sn.items()}
+            win_up = comm_sn["up"] - prev["up"]
+            win_down = comm_sn["down"] - prev["down"]
+            win_up_w = comm_sn["up_wire"] - prev["up_wire"]
+            win_down_w = comm_sn["down_wire"] - prev["down_wire"]
+            st.prev_snap = comm_sn
+            busiest = float(np.maximum(win_up, win_down).max()) * MB
+            flops = strat.round_flops(self.state, ctx)
+            self._comm["busiest_mb"].append(busiest)
+            self._comm["avg_per_node_mb"].append(
+                float(np.maximum(win_up, win_down).mean()) * MB)
+            self._comm["total_mb"].append(float(win_up.sum()) * MB)
+            self._comm["busiest_mb_with_bitmap"].append(
+                float(np.maximum(win_up_w, win_down_w).max()) * MB)
+            for key in self._flops:
+                self._flops[key].append(float(getattr(flops, key)))
+            acc_mean = acc_std = None
+            if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                accs = evaluate_clients(
+                    self.task, strat.eval_params(self.state, ctx),
+                    self.clients)
+                acc_mean = float(np.mean(accs))
+                acc_std = float(np.std(accs))
+                self._acc_history.append(acc_mean)
+                self._acc_stds.append(acc_std)
+                self._eval_rounds.append(t)
+                self.acc_trace.append((self.clock.now, acc_mean))
+            up, down = self.stats.up * MB, self.stats.down * MB
+            st.emitted += 1
+            self._next_round = st.emitted
+            yield SimRoundMetrics(
+                round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
+                comm_busiest_mb=busiest,
+                comm_rows={"busiest_MB": round(busiest, 3)},
+                flops_round=flops.per_round_flops,
+                cum_flops=float(np.sum(self._flops["per_round_flops"])),
+                acc_mean=acc_mean, acc_std=acc_std, wall_s=0.0,
+                sim_time_s=self.clock.now, sim_round_s=0.0,
+                measured_total_mb=self.stats.total_mb,
+                busiest_up_mb=float(up.max()),
+                busiest_down_mb=float(down.max()),
+                min_round=int(st.t_local.min()),
+                max_round=int(st.t_local.max()),
+                retrans_mb=self.stats.retrans_mb,
+                lost_messages=self.stats.n_lost)
+
     def _async_rounds(self):
         cfg = self.cfg
         strat = self.strategy
         n = len(self.clients)
-        if self._next_round != 0:
-            raise NotImplementedError(
-                "async simulation does not support checkpoint resume")
         if not strat.decentralized:
             # a non-gossip mix would read live peer state instead of what
             # arrived over the simulated links — every reported number would
@@ -263,101 +604,42 @@ class SimEngine(RoundEngine):
             raise ValueError(
                 f"async simulation requires per-client state['params'] lists "
                 f"(strategy '{strat.name}' has none)")
-
-        q = EventQueue()
-        inbox: list[dict[int, _Message]] = [dict() for _ in range(n)]
-        t_local = np.zeros(n, dtype=int)
-        down_count = np.zeros(n, dtype=int)    # total down slots (slot offset)
-        down_streak = np.zeros(n, dtype=int)   # consecutive down retries
-        waiting: set[int] = set()
-        done: set[int] = set()
-        dead: set[int] = set()
-        emitted = 0                      # global rounds yielded so far
+        if self._as is None:
+            if self._next_round != 0:
+                raise ValueError(
+                    "this engine was restored from a non-async checkpoint "
+                    "or advanced outside the event loop; async resume needs "
+                    "a SimEngine mode='async' checkpoint")
+            self._as = self._fresh_async_state()
+        st = self._as
         self._stop = False
-        for k in range(n):
-            q.push(0.0, WAKE, k=k)
-
-        def live_floor() -> int:
-            """Slowest *participating* client's completed rounds — dead
-            clients (permanently unavailable) stop bounding progress.  With
-            nobody left alive no further progress is possible, so the floor
-            freezes at the rounds already emitted (the run ends partial
-            rather than fabricating untrained rounds)."""
-            alive_t = [int(t_local[i]) for i in range(n) if i not in dead]
-            return min(alive_t) if alive_t else emitted
 
         def flops_at(t: int) -> float:
             ctx = self._make_ctx(int(t))
             return strat.round_flops(self.state, ctx).per_round_flops
 
-        prev_snap = self.stats.snapshot()
+        # rounds already completed by the cut but not yet emitted at the
+        # checkpoint (a DONE may complete several global rounds at once):
+        # flush them first so the resumed stream is gapless
+        for m in self._emit_ready_rounds(st):
+            for cb in self.callbacks:
+                cb.on_round_end(self, m)
+            yield m
+            if self._stop:
+                break
 
-        def emit_rounds():
-            """Yield one SimRoundMetrics per newly completed global round
-            (a round is complete once the slowest client passes it)."""
-            nonlocal emitted, prev_snap
-            floor = live_floor()
-            out = []
-            while emitted < floor:
-                t = emitted
-                ctx = self._make_ctx(t)
-                comm_sn = self.stats.snapshot()
-                win_up = comm_sn["up"] - prev_snap["up"]
-                win_down = comm_sn["down"] - prev_snap["down"]
-                win_up_w = comm_sn["up_wire"] - prev_snap["up_wire"]
-                win_down_w = comm_sn["down_wire"] - prev_snap["down_wire"]
-                prev_snap = comm_sn
-                busiest = float(np.maximum(win_up, win_down).max()) * MB
-                flops = strat.round_flops(self.state, ctx)
-                self._comm["busiest_mb"].append(busiest)
-                self._comm["avg_per_node_mb"].append(
-                    float(np.maximum(win_up, win_down).mean()) * MB)
-                self._comm["total_mb"].append(float(win_up.sum()) * MB)
-                self._comm["busiest_mb_with_bitmap"].append(
-                    float(np.maximum(win_up_w, win_down_w).max()) * MB)
-                for key in self._flops:
-                    self._flops[key].append(float(getattr(flops, key)))
-                acc_mean = acc_std = None
-                if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-                    accs = evaluate_clients(
-                        self.task, strat.eval_params(self.state, ctx),
-                        self.clients)
-                    acc_mean = float(np.mean(accs))
-                    acc_std = float(np.std(accs))
-                    self._acc_history.append(acc_mean)
-                    self._acc_stds.append(acc_std)
-                    self._eval_rounds.append(t)
-                    self.acc_trace.append((self.clock.now, acc_mean))
-                up, down = self.stats.up * MB, self.stats.down * MB
-                out.append(SimRoundMetrics(
-                    round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
-                    comm_busiest_mb=busiest,
-                    comm_rows={"busiest_MB": round(busiest, 3)},
-                    flops_round=flops.per_round_flops,
-                    cum_flops=float(np.sum(self._flops["per_round_flops"])),
-                    acc_mean=acc_mean, acc_std=acc_std, wall_s=0.0,
-                    sim_time_s=self.clock.now, sim_round_s=0.0,
-                    measured_total_mb=self.stats.total_mb,
-                    busiest_up_mb=float(up.max()),
-                    busiest_down_mb=float(down.max()),
-                    min_round=int(t_local.min()),
-                    max_round=int(t_local.max())))
-                emitted += 1
-                self._next_round = emitted
-            return out
-
-        while q and len(done) < n and not self._stop:
-            ev = q.pop()
+        while st.q and len(st.done) < n and not self._stop:
+            ev = st.q.pop()
             self.clock.advance_to(ev.time)
             if ev.kind == ARRIVAL:
                 k, src = ev.data["k"], ev.data["src"]
                 msg = ev.data["msg"]
-                cur = inbox[k].get(src)
+                cur = st.inbox[k].get(src)
                 if cur is None or msg.version >= cur.version:
-                    inbox[k][src] = msg
-                if k in waiting:
-                    waiting.discard(k)
-                    q.push(ev.time, WAKE, k=k)
+                    st.inbox[k][src] = msg
+                if k in st.waiting:
+                    st.waiting.discard(k)
+                    st.q.push(ev.time, WAKE, k=k)
                 continue
 
             if ev.kind == DONE:
@@ -365,18 +647,17 @@ class SimEngine(RoundEngine):
                 # now does its local clock advance, unblocking SSP waiters
                 # and (possibly) completing a global round
                 k = ev.data["k"]
-                t_local[k] += 1
-                self._last_finish = max(getattr(self, "_last_finish", 0.0),
-                                        ev.time)
-                if t_local[k] >= cfg.rounds:
-                    done.add(k)
+                st.t_local[k] += 1
+                st.last_finish = max(st.last_finish, ev.time)
+                if st.t_local[k] >= cfg.rounds:
+                    st.done.add(k)
                 else:
-                    q.push(ev.time, WAKE, k=k)
-                if live_floor() > emitted:
-                    for w in sorted(waiting):
-                        q.push(ev.time, WAKE, k=w)
-                    waiting.clear()
-                    for m in emit_rounds():
+                    st.q.push(ev.time, WAKE, k=k)
+                if self._live_floor(st) > st.emitted:
+                    for w in sorted(st.waiting):
+                        st.q.push(ev.time, WAKE, k=w)
+                    st.waiting.clear()
+                    for m in self._emit_ready_rounds(st):
                         for cb in self.callbacks:
                             cb.on_round_end(self, m)
                         yield m
@@ -385,28 +666,28 @@ class SimEngine(RoundEngine):
                 continue
 
             k = ev.data["k"]
-            if k in done:
+            if k in st.done:
                 continue
-            t_k = int(t_local[k])
+            t_k = int(st.t_local[k])
             # bounded staleness (SSP): never run more than `staleness` rounds
             # ahead of the slowest participating client
-            spread = t_k - live_floor()
+            spread = t_k - self._live_floor(st)
             if self.staleness >= 0 and spread > self.staleness:
-                waiting.add(k)
+                st.waiting.add(k)
                 continue
             # availability: a down client retries one mean-round later
             # against its next slot; after max_down_retries consecutive down
             # slots it is declared dead so it cannot stall the whole network
-            if not self.availability.up(k, t_k + int(down_count[k])):
-                down_count[k] += 1
-                down_streak[k] += 1
-                if down_streak[k] > self.max_down_retries:
-                    dead.add(k)
-                    done.add(k)
-                    for w in sorted(waiting):
-                        q.push(ev.time, WAKE, k=w)
-                    waiting.clear()
-                    for m in emit_rounds():
+            if not self.availability.up(k, t_k + int(st.down_count[k])):
+                st.down_count[k] += 1
+                st.down_streak[k] += 1
+                if st.down_streak[k] > self.max_down_retries:
+                    st.dead.add(k)
+                    st.done.add(k)
+                    for w in sorted(st.waiting):
+                        st.q.push(ev.time, WAKE, k=w)
+                    st.waiting.clear()
+                    for m in self._emit_ready_rounds(st):
                         for cb in self.callbacks:
                             cb.on_round_end(self, m)
                         yield m
@@ -414,14 +695,14 @@ class SimEngine(RoundEngine):
                             break
                     continue
                 retry = self.compute.mean_round_s(flops_at(t_k))
-                q.push(ev.time + max(retry, 1e-9), WAKE, k=k)
+                st.q.push(ev.time + max(retry, 1e-9), WAKE, k=k)
                 continue
-            down_streak[k] = 0
+            st.down_streak[k] = 0
             self.observed_spread = max(self.observed_spread, max(0, spread))
 
             # 1. mix what has arrived (respecting the staleness bound)
             senders = {
-                j: m for j, m in inbox[k].items()
+                j: m for j, m in st.inbox[k].items()
                 if self.staleness < 0 or t_k - m.version <= self.staleness}
             for m in senders.values():
                 self.observed_mix_lag = max(self.observed_mix_lag,
@@ -443,26 +724,29 @@ class SimEngine(RoundEngine):
 
             # 3. compute time, then push to sampled receivers.  The payload
             # is the packed message itself; its sizes are codec-measured
-            # from what actually ships, not recomputed from nnz
+            # from what actually ships, not recomputed from nnz.  Sends
+            # queue on the sender's shared uplink (unless uplink="parallel")
+            # and may be dropped + retransmitted by the loss model; a
+            # message that exhausts its budget never ARRIVEs
             flops = strat.round_flops(self.state, ctx).per_round_flops
             finish = ev.time + self.compute.local_time(k, flops)
             payload = strat.snapshot_message(self.state, k)
             bytes_v, bytes_w = measure_payload(payload)
             msg = _Message(version=t_k + 1, payload=payload)
-            for j in directed_out_neighbors(n, k, t_k, cfg.degree, cfg.seed):
-                j = int(j)
-                arrive = finish + self.links.transfer_time(bytes_w, k, j)
-                self.stats.record(k, j, bytes_v, bytes_w, finish, arrive)
-                q.push(arrive, ARRIVAL, k=j, src=k, msg=msg)
+            receivers = directed_out_neighbors(n, k, t_k, cfg.degree, cfg.seed)
+            jobs = [(int(j), bytes_v, float(bytes_w)) for j in receivers]
+            for j, delivered, arrive in self._transmit(
+                    k, jobs, finish, t_k + 1, reliable=False):
+                if delivered:
+                    st.q.push(arrive, ARRIVAL, k=j, src=k, msg=msg)
 
             # 4. the round completes (and the local clock advances) at the
             # compute-finish time, handled by the DONE event above
-            q.push(finish, DONE, k=k)
+            st.q.push(finish, DONE, k=k)
         # the run ends when the last client finishes its compute, even if
         # some already-sent messages are still in flight
-        self.clock.advance_to(max(getattr(self, "_last_finish", 0.0),
-                                  self.clock.now))
-        for m in emit_rounds():
+        self.clock.advance_to(max(st.last_finish, self.clock.now))
+        for m in self._emit_ready_rounds(st):
             for cb in self.callbacks:
                 cb.on_round_end(self, m)
             yield m

@@ -9,6 +9,12 @@ thing everywhere.
 Slots are communication rounds in the synchronous engine; the asynchronous
 engine advances a client's slot on every activation attempt (a down client
 retries one mean-round later against its next slot).
+
+Availability models are *stateless*: ``alive(slot)`` is a pure function of
+(seed, slot), so nothing here needs checkpointing — the simulator's slot
+counters (``down_count`` per client) live in ``SimEngine``'s event-loop
+state and are serialized by ``SimEngine.save``, which is what makes a
+resumed fault-injection run replay the exact same up/down schedule.
 """
 from __future__ import annotations
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Iterator, Optional
+from typing import Any, Iterable, Iterator, Optional
 
 import numpy as np
 
@@ -48,6 +48,23 @@ class EventQueue:
 
     def pop(self) -> Event:
         return heapq.heappop(self._heap)[2]
+
+    # -- checkpointing -----------------------------------------------------
+    def pending(self) -> list[Event]:
+        """Pending events in pop order (non-destructive) — what a
+        checkpoint must persist for the tie-breaks to survive a resume."""
+        return [item[2] for item in sorted(self._heap)]
+
+    def restore(self, events: Iterable[Event]) -> None:
+        """Rebuild the queue from checkpointed events, preserving each
+        event's original insertion sequence so (time, seq) ordering — and
+        therefore every tie-break — is bit-identical after resume."""
+        self._heap = []
+        max_seq = -1
+        for ev in events:
+            heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+            max_seq = max(max_seq, ev.seq)
+        self._seq = itertools.count(max_seq + 1)
 
     def peek_time(self) -> Optional[float]:
         return self._heap[0][0] if self._heap else None

@@ -56,6 +56,9 @@ class SimReport:
     sim_wall_s: float                       # total virtual seconds
     total_mb: float                         # measured, value-bytes
     total_wire_mb: float                    # + mask bitmaps
+    retrans_mb: float                       # value-MB spent on retransmits
+    n_retransmits: int                      # retransmitted attempts
+    lost_messages: int                      # never delivered (async loss)
     busiest_node: int
     busiest_node_mb: float                  # max(up, down) convention
     busiest_up_mb: float
@@ -83,6 +86,8 @@ class SimReport:
             "sim_wall_s": round(self.sim_wall_s, 2),
             "busiest_MB": round(self.busiest_node_mb, 2),
             "total_MB": round(self.total_mb, 2),
+            "retrans_MB": round(self.retrans_mb, 3),
+            "lost_messages": self.lost_messages,
             "time_to_target_s": {str(k): round(v, 2)
                                  for k, v in self.time_to_target_s.items()},
             "busiest_MB_at_target": {str(k): round(v, 2)
@@ -117,6 +122,9 @@ def build_report(mode: str, stats: LinkStats,
         sim_wall_s=float(sim_wall_s),
         total_mb=stats.total_mb,
         total_wire_mb=stats.total_wire_mb,
+        retrans_mb=stats.retrans_mb,
+        n_retransmits=stats.n_retransmits,
+        lost_messages=stats.n_lost,
         busiest_node=node,
         busiest_node_mb=busiest_mb,
         busiest_up_mb=float(stats.up[node]) * MB,

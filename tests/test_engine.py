@@ -128,6 +128,7 @@ def _reference_dpsgd(task, clients, cfg):
     return params, history
 
 
+@pytest.mark.slow
 def test_dispfl_golden_equivalence(setup):
     task, clients, cfg = setup
     ref_params, ref_masks, ref_hist = _reference_dispfl(task, clients, cfg)

@@ -26,6 +26,7 @@ def test_cosine_annealing_endpoints():
     assert cosine_prune_rate(0.5, 50, 100) == pytest.approx(0.25)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(32, 400), rate=st.floats(0.0, 0.9), seed=st.integers(0, 50))
 def test_nnz_budget_preserved(n, rate, seed):

@@ -21,12 +21,15 @@ from repro.data import build_federated_image_task
 from repro.fl import FLConfig, JsonlLogger, RoundEngine, make_cnn_task, make_strategy
 from repro.sim import (
     AlwaysUp,
+    BandwidthTrace,
     BernoulliAvailability,
     ComputeModel,
     EventQueue,
     LinkModel,
+    LossModel,
     SimEngine,
     TraceAvailability,
+    UplinkScheduler,
     hetero_speeds,
 )
 from repro.sim.report import time_to_target
@@ -287,14 +290,158 @@ def test_async_time_to_target_monotone(setup):
     assert rep.n_transfers == len(sim.stats.transfers)
 
 
-def test_async_rejects_resume_and_global_state(setup, tmp_path):
+def test_async_rejects_global_state_and_foreign_checkpoints(setup, tmp_path):
     task, clients, cfg = setup
     sim = SimEngine(make_strategy("fedavg"), task, clients, cfg, mode="async")
     with pytest.raises(ValueError):
         list(sim.rounds())
-    # resume would silently zero the virtual timeline -> refused in any mode
-    path = str(tmp_path / "sim.npz")
-    eng = SimEngine(make_strategy("dpsgd"), task, clients, cfg, mode="sync")
+    # a RoundEngine checkpoint carries no virtual timeline: restoring it
+    # into a SimEngine would silently zero the clock -> refused
+    path = str(tmp_path / "eng.npz")
+    eng = RoundEngine(make_strategy("dpsgd"), task, clients, cfg)
     eng.save(path)
-    with pytest.raises(NotImplementedError):
-        eng.restore(path)
+    with pytest.raises(ValueError, match="SimEngine checkpoint"):
+        SimEngine(make_strategy("dpsgd"), task, clients, cfg,
+                  mode="sync").restore(path)
+    # mode mismatch: a sync checkpoint has no event-loop state to resume
+    path2 = str(tmp_path / "sync.npz")
+    SimEngine(make_strategy("dpsgd"), task, clients, cfg,
+              mode="sync").save(path2)
+    with pytest.raises(ValueError, match="mode"):
+        SimEngine(make_strategy("dpsgd"), task, clients, cfg,
+                  mode="async").restore(path2)
+    # the superset direction is fine: RoundEngine can resume a sim archive
+    RoundEngine(make_strategy("dpsgd"), task, clients, cfg).restore(path2)
+
+
+# ---------------------------------------------------------------------------
+# v2 substrate: shared uplinks, message loss, bandwidth traces
+# ---------------------------------------------------------------------------
+
+
+def test_uplink_scheduler_disciplines():
+    lm = LinkModel.uniform(4, mbps=100, latency_ms=10)
+    jobs = [(1, 1e6), (2, 1e6), (3, 1e6)]   # 0.08 s serialization each
+    par = UplinkScheduler(4, "parallel").schedule(lm, 0, jobs, 1.0)
+    assert all(s == 1.0 and e == pytest.approx(1.09) for s, e in par)
+    fifo = UplinkScheduler(4, "fifo")
+    got = fifo.schedule(lm, 0, jobs, 1.0)
+    assert [round(e, 3) for _, e in got] == [1.09, 1.17, 1.25]
+    assert fifo.free_at[0] == pytest.approx(1.24)   # busy through 3 frames
+    # a later batch queues behind the busy uplink
+    (s2, _e2), = fifo.schedule(lm, 0, [(1, 1e6)], 1.0)
+    assert s2 == pytest.approx(1.24)
+    # fair: processor sharing — equal sizes all finish at 3x one frame
+    fair = UplinkScheduler(4, "fair").schedule(lm, 0, jobs, 1.0)
+    assert all(e == pytest.approx(1.25) for _, e in fair)
+    with pytest.raises(ValueError):
+        UplinkScheduler(4, "warp")
+
+
+def test_loss_model_deterministic_and_bounded():
+    loss = LossModel(0.5, timeout_s=0.2, max_retries=3, seed=1)
+    draws = [loss.attempts(0, 1, t) for t in range(50)]
+    assert draws == [loss.attempts(0, 1, t) for t in range(50)]
+    assert any(a > 1 for a, _ in draws)          # drops do happen at p=0.5
+    assert all(1 <= a <= 4 for a, _ in draws)    # capped at max_retries + 1
+    assert all(ok for a, ok in draws if a <= 3)  # early exit == delivered
+    # p=0 short-circuits; different links draw independent streams
+    assert LossModel(0.0).attempts(3, 2, 7) == (1, True)
+    other = [loss.attempts(2, 3, t) for t in range(50)]
+    assert other != draws
+
+
+def test_bandwidth_trace_scales_transfer_time(tmp_path):
+    import json
+    tr = BandwidthTrace([0.0, 10.0], np.array([1.0, 0.25]))
+    lm = LinkModel.uniform(2, mbps=100, latency_ms=0, trace=tr)
+    assert lm.transfer_time(1e6, 0, 1, 5.0) == pytest.approx(0.08)
+    assert lm.transfer_time(1e6, 0, 1, 15.0) == pytest.approx(0.32)
+    # per-client rows scale the *sender's* uplink
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps({"times": [0.0], "scale": [[1.0, 0.5]]}))
+    lm2 = LinkModel.uniform(2, mbps=100, latency_ms=0,
+                            trace=BandwidthTrace.from_json(str(p)))
+    assert lm2.transfer_time(1e6, 0, 1, 0.0) == pytest.approx(0.08)
+    assert lm2.transfer_time(1e6, 1, 0, 0.0) == pytest.approx(0.16)
+    with pytest.raises(ValueError):
+        BandwidthTrace([0.0], np.array([0.0]))   # non-positive scale
+
+
+def test_sync_faults_keep_state_and_stretch_clock(setup):
+    # the barrier's transport is reliable: loss + uplink contention change
+    # the timeline and the bytes, never the training trajectory
+    task, clients, cfg = setup
+    ref = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="loop").run()
+    clean = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="loop", mode="sync")
+    clean.run()
+    faulty = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                       local_exec="loop", mode="sync", uplink="fifo",
+                       loss=LossModel(0.3, timeout_s=0.05, seed=0))
+    res = faulty.run()
+    assert res.acc_history == ref.acc_history
+    assert faulty.stats.n_retransmits > 0
+    assert faulty.stats.retrans_mb > 0
+    assert faulty.stats.n_lost == 0              # reliable: always delivered
+    assert faulty.sim_time > clean.sim_time      # retransmits + serialization
+    assert faulty.stats.total_mb > clean.stats.total_mb
+    rep = faulty.report()
+    assert rep.retrans_mb == pytest.approx(faulty.stats.retrans_mb)
+    assert rep.n_retransmits == faulty.stats.n_retransmits
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume: bit-identical to the uninterrupted run, both modes
+# ---------------------------------------------------------------------------
+
+
+def _strip_wall(d: dict) -> dict:
+    d = dict(d)
+    d.pop("wall_s")          # host wall-clock: never bit-stable
+    return d
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("sync", {}),
+    ("async", dict(staleness=1, round_s=1.0)),
+    ("async", dict(staleness=2, round_s=1.0, uplink="fifo",
+                   loss=LossModel(0.25, timeout_s=0.3, seed=0))),
+], ids=["sync", "async", "async_faults"])
+def test_checkpoint_resume_bit_identical(mode, kw, setup, tmp_path):
+    task, clients, cfg = setup
+    speeds = hetero_speeds(4, seed=2) if mode == "async" else None
+
+    def build():
+        return SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                         mode=mode, compute_speeds=speeds, **kw)
+
+    ref = build()
+    ref_metrics = [_strip_wall(m.to_dict()) for m in ref.rounds()]
+
+    path = str(tmp_path / "sim_ck.npz")
+    first = build()
+    got = []
+    for m in first.rounds():       # cut mid-run, checkpoint, abandon
+        got.append(_strip_wall(m.to_dict()))
+        if m.round == 1:
+            first.save(path)
+            break
+    resumed = build().restore(path)
+    for m in resumed.rounds():
+        got.append(_strip_wall(m.to_dict()))
+
+    assert got == ref_metrics                      # every streamed metric
+    assert _trees_equal(resumed.state, ref.state)  # final params/masks
+    assert resumed.clock.now == ref.clock.now      # virtual clock, exact
+    assert resumed.acc_trace == ref.acc_trace
+    # LinkStats: aggregates and the full transfer log
+    assert np.array_equal(resumed.stats.up, ref.stats.up)
+    assert np.array_equal(resumed.stats.down, ref.stats.down)
+    assert np.array_equal(resumed.stats.edge_busy_s, ref.stats.edge_busy_s)
+    assert resumed.stats.transfers == ref.stats.transfers
+    assert resumed.stats.n_retransmits == ref.stats.n_retransmits
+    assert resumed.stats.n_lost == ref.stats.n_lost
+    assert np.array_equal(resumed.uplink.free_at, ref.uplink.free_at)
+    assert resumed.report((0.0,)).to_dict() == ref.report((0.0,)).to_dict()

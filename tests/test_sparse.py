@@ -303,6 +303,7 @@ def _async_accum_work(k_clients: int, degree: int, seed: int = 0) -> dict:
     return work
 
 
+@pytest.mark.slow
 def test_mix_one_cost_scales_with_degree_not_k():
     # K=32: ring-like (degree 2) vs fully-connected (degree 31) push gossip.
     # Per activation, mix_one folds only the arrived packed payloads — the
