@@ -6,6 +6,8 @@
 #   make test        - full test suite (includes slow golden tests)
 #   make sim-smoke   - event-driven async network simulator smoke run
 #                      (lossy links + shared FIFO uplink + retransmits)
+#   make scale-smoke - ScaleEngine smoke: the whole round as one jitted
+#                      stacked program, K=8 sharded over 4 host devices
 #   make codec-smoke - packed payload codec/gossip benchmark (bytes vs density)
 #   make bench-gate  - benchmark regression gate: fresh codec/vmap/sim rows
 #                      vs benchmarks/baselines/*.json (CI full job; refresh
@@ -14,9 +16,9 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test tier1 smoke sim-smoke codec-smoke bench-gate
+.PHONY: verify test tier1 smoke sim-smoke scale-smoke codec-smoke bench-gate
 
-verify: test smoke sim-smoke codec-smoke
+verify: test smoke sim-smoke scale-smoke codec-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -33,6 +35,12 @@ sim-smoke:
 	    --rounds 3 --clients 4 --local-epochs 1 --samples-per-class 20 \
 	    --eval-every 3 --staleness 2 --compute-hetero --bandwidth-skew 10 \
 	    --uplink-mode fifo --loss-prob 0.1 --retransmit-timeout 0.3
+
+scale-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	    $(PY) -m repro.launch.train simulate --scale --mesh-shape 4x1 \
+	    --strategy dispfl --rounds 2 --clients 8 --batch-size 8 \
+	    --local-epochs 1 --samples-per-class 20 --eval-every 2
 
 codec-smoke:
 	$(PY) -m benchmarks.run --only sparse_codec

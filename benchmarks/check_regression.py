@@ -35,7 +35,7 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 #: modules under the gate (a subset of benchmarks.run.MODULES: the ones
 #: whose rows are stable enough to be a contract)
-MODULES = ["sparse_codec", "engine_vmap", "sim_faults"]
+MODULES = ["sparse_codec", "engine_vmap", "scale_engine", "sim_faults"]
 
 # metric -> rule.  kinds:
 #   close      |new - base| <= atol + rtol * |base|
@@ -53,6 +53,15 @@ _RULES: dict[str, dict] = {
     "speedup": {"kind": "floor", "abs_floor": 1.1, "frac": 0.4},
     "acc_loop": {"kind": "close", "rtol": 0.2, "atol": 0.05},
     "acc_vmap": {"kind": "close", "rtol": 0.2, "atol": 0.05},
+    # scale: the one-program stacked round must keep >=4x over the loop
+    # engine (the repro.scale acceptance floor), bytes are exact functions
+    # of (seed, density) and accuracies must agree across engines
+    "speedup_vs_loop": {"kind": "floor", "abs_floor": 4.0, "frac": 0.4},
+    "acc_scale": {"kind": "close", "rtol": 0.2, "atol": 0.05},
+    "accs_agree": {"kind": "exact"},
+    "wire_bytes_per_msg": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "wire_bytes_max_msg": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "busiest_MB_per_round": {"kind": "close", "rtol": 0.05, "atol": 0.01},
     # simulator: virtual, deterministic given the seed
     "sim_wall_s": {"kind": "close", "rtol": 0.25, "atol": 0.5},
     "sim_s_to_target": {"kind": "close", "rtol": 0.35, "atol": 1.0},
@@ -76,6 +85,7 @@ _RULES: dict[str, dict] = {
     "gossip_deg3_us": {"kind": "timing", "max_ratio": 8.0},
     "loop_s_per_round": {"kind": "timing", "max_ratio": 8.0},
     "vmap_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+    "scale_s_per_round": {"kind": "timing", "max_ratio": 8.0},
 }
 
 

@@ -28,6 +28,7 @@ MODULES = [
     "sim_faults",        # §Sim v2: clean vs lossy vs shared-uplink physics
     "sparse_codec",      # §Sparse: packed payload throughput + bytes vs density
     "engine_vmap",       # §Perf: loop vs vmap local phase at K>=16
+    "scale_engine",      # §Scale: one-program stacked round vs loop engine
     "roofline",          # dry-run roofline aggregation
 ]
 

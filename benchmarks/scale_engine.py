@@ -1,0 +1,102 @@
+"""ScaleEngine vs the loop engine: rounds/s and per-round bytes vs K.
+
+For each client count K the same dispfl workload runs through
+
+* ``RoundEngine(local_exec="loop")`` — the per-client reference semantics,
+* ``ScaleEngine`` — the whole round (gossip mix, local phase, mask
+  evolution) as one jitted stacked program,
+
+with one warm-up round excluded (jit compile) and the steady-state
+seconds/round compared.  The per-round communication columns come from the
+engine's own accounting (*analytic*, from the round adjacency and mask
+nnz) and from the codec frame of a real packed message
+(``ScaleEngine.snapshot_messages`` — *measured*), so the bytes are exact
+deterministic functions of the seed and gate tightly.
+
+Gate contract (benchmarks/baselines/scale_engine.json): the K=64 row's
+``speedup_vs_loop`` must stay >= 4x (the repro.scale acceptance floor);
+byte columns are exact-function-of-seed tight.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import timer
+
+
+def _setup(k: int, fast: bool):
+    from repro.data import build_federated_image_task
+    from repro.fl import FLConfig, make_cnn_task
+
+    clients, _ = build_federated_image_task(
+        0, n_clients=k, partition="pathological", classes_per_client=2,
+        n_train_per_class=64 if fast else 160,
+        n_test_per_client=20, hw=16, noise=0.8)
+    # one shared effective batch size (the stacked-program regime; the
+    # loop engine runs the identical equalized shards for a fair A/B)
+    n_min = min(c.n_train for c in clients)
+    clients = [dataclasses.replace(c, train_x=c.train_x[:n_min],
+                                   train_y=c.train_y[:n_min])
+               for c in clients]
+    task = make_cnn_task("smallcnn", 10, 16, width=8 if fast else 16)
+    cfg = FLConfig(n_clients=k, rounds=3 if fast else 5,
+                   local_epochs=2 if fast else 5, batch_size=32,
+                   degree=min(10, k - 1), eval_every=10**6)
+    return task, clients, cfg
+
+
+def run(fast: bool = True) -> list[dict]:
+    from repro.fl import RoundEngine, make_strategy
+    from repro.scale import ScaleEngine
+    from repro.sparse import encoded_nbytes
+
+    rows = []
+    for k in ((16, 64) if fast else (16, 64, 128)):
+        task, clients, cfg = _setup(k, fast)
+        walls = {}
+        accs = {}
+        engines = {
+            "loop": lambda: RoundEngine(make_strategy("dispfl"), task,
+                                        clients, cfg, local_exec="loop"),
+            "scale": lambda: ScaleEngine(make_strategy("dispfl"), task,
+                                         clients, cfg),
+        }
+        byte_row = {}
+        for label, build in engines.items():
+            eng = build()
+            it = eng.rounds()
+            next(it)                    # warm-up round (jit compiles)
+            with timer() as box:
+                steady = sum(1 for _ in it)
+            walls[label] = box["s"] / max(steady, 1)
+            accs[label] = eng.result().final_acc
+            if label == "scale":
+                # measured: the codec frame each client would put on the
+                # wire after the run; analytic: the engine's per-round
+                # busiest-node accounting (mean over rounds)
+                frames = [encoded_nbytes(m["packed"])
+                          for m in eng.snapshot_messages()]
+                res = eng.result()
+                byte_row = {
+                    "wire_bytes_per_msg": int(frames[0]),
+                    "wire_bytes_max_msg": int(max(frames)),
+                    "busiest_MB_per_round": round(res.comm_busiest_mb, 4),
+                }
+        rows.append({
+            "name": f"scale_engine/dispfl_K{k}",
+            "us_per_call": round(walls["scale"] * 1e6, 1),
+            "loop_s_per_round": round(walls["loop"], 3),
+            "scale_s_per_round": round(walls["scale"], 3),
+            "speedup_vs_loop": round(walls["loop"] / walls["scale"], 2),
+            "acc_loop": round(accs["loop"], 4),
+            "acc_scale": round(accs["scale"], 4),
+            "accs_agree": bool(abs(accs["loop"] - accs["scale"]) < 0.05),
+            **byte_row,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(fast=True))

@@ -51,15 +51,16 @@ def gossip_average_stacked(
 
     Returns:
       stacked w_{·,t+1/2}, same structure/shapes.
+
+    Delegates to ``repro.scale.stacked.masked_gossip_stacked`` — the single
+    stacked gossip implementation (lazy import so ``core`` stays loadable
+    on its own); this fp32-accumulating einsum form is bit-identical to
+    the previous inline body for fp32 trees.
     """
+    from repro.scale.stacked import masked_gossip_stacked
 
-    def one(w, m):
-        a = adjacency.astype(w.dtype)
-        num = jnp.einsum("kj,j...->k...", a, w * m.astype(w.dtype))
-        den = jnp.einsum("kj,j...->k...", a, m.astype(w.dtype))
-        return _intersection_avg(num, den, m.astype(w.dtype))
-
-    return jax.tree.map(one, stacked_params, stacked_masks)
+    return masked_gossip_stacked(stacked_params, stacked_masks, adjacency,
+                                 reduction="einsum")
 
 
 def gossip_average_one(
@@ -87,9 +88,8 @@ def gossip_average_one(
 
 @partial(jax.jit, static_argnames=())
 def plain_gossip_stacked(stacked_params: PyTree, mixing: jax.Array) -> PyTree:
-    """D-PSGD style gossip: w_k <- sum_j W[k,j] w_j with row-stochastic W."""
+    """D-PSGD style gossip: w_k <- sum_j W[k,j] w_j with row-stochastic W.
+    Delegates to the single stacked implementation in ``repro.scale``."""
+    from repro.scale.stacked import plain_mix_stacked
 
-    def one(w):
-        return jnp.einsum("kj,j...->k...", mixing.astype(w.dtype), w)
-
-    return jax.tree.map(one, stacked_params)
+    return plain_mix_stacked(stacked_params, mixing, reduction="einsum")

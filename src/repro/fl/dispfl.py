@@ -47,13 +47,32 @@ class DisPFLStrategy(StrategyBase):
     message that physically crosses a link) and decoded once per round; the
     async per-activation path (``mix_one``) folds the payloads directly
     into (num, den) accumulators.  Both are bit-identical to the dense
-    ``packed=False`` reference path (golden-tested)."""
+    ``packed=False`` reference path (golden-tested).
+
+    ``payload_dtype="fp16"`` ships half-precision values on the wire: the
+    bitmap (and therefore every mask) is unchanged, each held value is cast
+    to fp16 at the message boundary, and the codec frame shrinks to
+    header + bitmap + 2*nnz bytes — exactly half the fp32 value payload.
+    Receivers mix the cast values in fp32, so the trajectory matches the
+    fp32 run to fp16 tolerance with *identical masks* (golden-tested);
+    the analytic ``round_comm`` keeps the paper's 4-bytes-per-value
+    headline while the measured/codec side reports the real halved frame
+    (the documented divergence in ``core.accounting``)."""
 
     vmap_capable = True
     decentralized = True
 
-    def __init__(self, packed: bool = True):
+    def __init__(self, packed: bool = True, payload_dtype: str = "fp32"):
+        if payload_dtype not in ("fp32", "fp16"):
+            raise ValueError(
+                f"payload_dtype must be fp32|fp16, got {payload_dtype!r}")
+        if payload_dtype == "fp16" and not packed:
+            raise ValueError("payload_dtype='fp16' requires packed=True "
+                             "(the cast happens at the message boundary)")
         self.packed = packed
+        self.payload_dtype = payload_dtype
+        #: dtype handed to pack_tree; None keeps values bit-exact fp32
+        self._wire_dtype = np.float16 if payload_dtype == "fp16" else None
 
     def init_state(self, task: Task, clients, cfg: FLConfig) -> dict:
         super().init_state(task, clients, cfg)
@@ -87,7 +106,9 @@ class DisPFLStrategy(StrategyBase):
             # decode is the cheap shape here; the async per-activation path
             # is mix_one, which folds payloads without a shared decode)
             senders = sorted({j for nbrs in nbrs_of for j in nbrs})
-            payloads = {j: pack_tree(params[j], masks[j]) for j in senders}
+            payloads = {j: pack_tree(params[j], masks[j],
+                                     dtype=self._wire_dtype)
+                        for j in senders}
             dec_w = {j: unpack_tree(p) for j, p in payloads.items()}
             dec_m = {j: unpack_mask_tree(p) for j, p in payloads.items()}
             state["params"] = [
@@ -112,6 +133,13 @@ class DisPFLStrategy(StrategyBase):
         packs = [senders[j]["packed"] for j in sorted(senders)]
         state["params"][k] = packed_gossip_one(
             state["params"][k], state["masks"][k], packs)
+
+    def snapshot_message(self, state: dict, k: int) -> dict:
+        """What k transmits: its packed masked model, values cast to the
+        wire dtype (fp16 halves the codec frame's value bytes; the bitmap
+        is dtype-independent)."""
+        return {"packed": pack_tree(state["params"][k], state["masks"][k],
+                                    dtype=self._wire_dtype)}
 
     def local_update(self, state: dict, k: int, ctx: RoundCtx) -> None:
         c = self.clients[k]
@@ -160,8 +188,8 @@ class DisPFLAnnealStrategy(DisPFLStrategy):
     simulator links exercise)."""
 
     def __init__(self, density_final: float | None = None,
-                 packed: bool = True):
-        super().__init__(packed=packed)
+                 packed: bool = True, payload_dtype: str = "fp32"):
+        super().__init__(packed=packed, payload_dtype=payload_dtype)
         #: constructor override; None defers to cfg at init_state time
         self.density_final = density_final
 

@@ -296,6 +296,7 @@ def _ensure_zoo() -> None:
     import repro.fl.centralized  # noqa: F401
     import repro.fl.decentralized  # noqa: F401
     import repro.fl.dispfl  # noqa: F401
+    import repro.fl.partial  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

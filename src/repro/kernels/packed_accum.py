@@ -38,7 +38,7 @@ BLOCK_N = 1024  # coords per grid step: 8 sublane rows of 128 lanes, 32 words
 
 def _packed_accum_kernel(num_ref, den_ref, words_ref, values_ref,
                          offsets_ref, alpha_ref, num_out, den_out,
-                         *, block_n: int):
+                         *, block_n: int, block_dim: int = 0):
     words = words_ref[0, :]                       # (block_n // 32,) uint32
     shifts = jax.lax.broadcasted_iota(
         jnp.uint32, (words.shape[0], 32), dimension=1)
@@ -47,7 +47,7 @@ def _packed_accum_kernel(num_ref, den_ref, words_ref, values_ref,
     # local value index per coordinate: offset + #set bits before it
     # (int32 cumsum: exact for any nnz, unlike a float prefix sum)
     pos = jnp.cumsum(bits.reshape(-1)) - 1
-    idx = jnp.maximum(pos + offsets_ref[0, pl.program_id(0)], 0)
+    idx = jnp.maximum(pos + offsets_ref[0, pl.program_id(block_dim)], 0)
     vals = values_ref[0, :].astype(jnp.float32)
     contrib = (jnp.where(mask.reshape(-1) > 0, jnp.take(vals, idx), 0.0)
                .reshape(1, block_n))
@@ -98,3 +98,57 @@ def packed_accum_flat(num: jax.Array, den: jax.Array, words: jax.Array,
     )(num[None, :], den[None, :], words[None, :], values[None, :],
       offsets[None, :], jnp.asarray(alpha, jnp.float32).reshape(1, 1))
     return num2[0], den2[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block_n"))
+def packed_accum_rows(num: jax.Array, den: jax.Array, words: jax.Array,
+                      values: jax.Array, offsets: jax.Array,
+                      alpha: jax.Array, interpret: bool = True,
+                      block_n: int = BLOCK_N):
+    """Client-stacked form of ``packed_accum_flat``: fold K packed payloads
+    into K accumulator rows in one launch.
+
+    num, den: (K, N) f32 with N a multiple of ``block_n``; words:
+    (K, N // 32) uint32 bitmaps; values: (K, max_nnz + block_n) per-client
+    value rows (left-aligned, zero right-padded so a window load never
+    overruns); offsets: (K, N // block_n) int32 exclusive prefixes of
+    per-block popcounts *per client*; alpha: () scalar shared.
+
+    The grid is (K, N // block_n) — the client dim maps to grid rows, so
+    the same VMEM-resident kernel body serves both layouts (this is the
+    stacked fold ``repro.scale.fold_stacked`` launches with
+    ``backend="pallas_rows"``).  Accumulates in place via
+    ``input_output_aliases`` exactly like the flat form.
+    """
+    k, n = num.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (k, n // block_n)
+    bw = block_n // 32
+    n_blocks = grid[1]
+    nv = values.shape[1]
+    num2, den2 = pl.pallas_call(
+        functools.partial(_packed_accum_kernel, block_n=block_n,
+                          block_dim=1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda r, i: (r, i)),
+            pl.BlockSpec((1, block_n), lambda r, i: (r, i)),
+            pl.BlockSpec((1, bw), lambda r, i: (r, i)),
+            pl.BlockSpec((1, nv), lambda r, i: (r, 0)),
+            pl.BlockSpec((1, n_blocks), lambda r, i: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda r, i: (r, i)),
+            pl.BlockSpec((1, block_n), lambda r, i: (r, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), num.dtype),
+            jax.ShapeDtypeStruct((k, n), den.dtype),
+        ],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(num, den, words, values, offsets,
+      jnp.asarray(alpha, jnp.float32).reshape(1, 1))
+    return num2, den2

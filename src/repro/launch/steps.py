@@ -124,10 +124,14 @@ def make_train_step(api: ModelAPI, plan: ScalePlan, gossip: str = "einsum"):
     """One DisPFL round step: intersection gossip + one masked-SGD step.
 
     gossip: 'einsum' (adjacency matmul over the stacked client dim — the
-    baseline), 'none' (ablation / non-FL training), or 'ppermute'
-    (neighbor exchange via shard_map collective_permute — §Perf optimized
-    path, see launch/gossip_opt.py).
+    baseline, delegating to ``repro.scale.masked_gossip_stacked``, the one
+    stacked gossip implementation shared with ``ScaleEngine``), 'none'
+    (ablation / non-FL training), or 'ppermute' (neighbor exchange via
+    shard_map collective_permute — §Perf optimized path, see
+    launch/gossip_opt.py).
     """
+    from repro.scale.stacked import masked_gossip_stacked
+
     wd = WEIGHT_DECAY
 
     def train_step(params, masks, batch, adjacency, lr):
@@ -138,18 +142,9 @@ def make_train_step(api: ModelAPI, plan: ScalePlan, gossip: str = "einsum"):
             pass
         elif gossip in ("einsum", "einsum_bf16", "einsum_noopt"):
             acc_dt = jnp.bfloat16 if gossip == "einsum_bf16" else jnp.float32
-
-            def mix(w, m):
-                a = adjacency.astype(acc_dt)
-                mf = m.astype(acc_dt)
-                wf = w.astype(acc_dt) * mf
-                num = jnp.einsum("kj,j...->k...", a, wf)
-                den = jnp.einsum("kj,j...->k...", a, mf)
-                return ((num.astype(jnp.float32)
-                         / jnp.maximum(den.astype(jnp.float32), 1.0))
-                        * m.astype(jnp.float32)).astype(w.dtype)
-
-            params = jax.tree.map(mix, params, masks)
+            params = masked_gossip_stacked(params, masks, adjacency,
+                                           reduction="einsum",
+                                           accum_dtype=acc_dt)
         elif gossip == "ppermute":
             from repro.launch.gossip_opt import ppermute_gossip
             params = ppermute_gossip(params, masks, plan)
@@ -175,60 +170,24 @@ def make_train_step(api: ModelAPI, plan: ScalePlan, gossip: str = "einsum"):
 def make_mask_update_step(api: ModelAPI, plan: ScalePlan, density: float = 0.5):
     """Once-per-round mask search (Alg. 2) as one SPMD program.
 
-    Per client: dense gradient on one batch, then per sparsifiable leaf a
-    threshold-based magnitude-prune + gradient-regrow (kth order statistics
-    via sort — identical semantics to kernels/ops.prune_regrow, up to ties).
-    Layer budgets are static (``density`` x numel), so the program is
-    shape-static and lowers like the train step.  Practical for <=30B-param
-    archs (the sort is O(n log n) per leaf); jamba-scale masks would use a
-    sampled-quantile threshold instead (documented in DESIGN.md).
+    Per client: dense gradient on one batch, then the threshold-based
+    stacked prune/regrow of ``repro.scale.stacked_prune_regrow_threshold``
+    (kth order statistics via sort — identical semantics to
+    kernels/ops.prune_regrow, up to ties).  Layer budgets are static
+    (``density`` x numel), so the program is shape-static and lowers like
+    the train step.  Practical for <=30B-param archs (the sort is
+    O(n log n) per leaf); jamba-scale masks would use a sampled-quantile
+    threshold instead (documented in DESIGN.md).
     """
+    from repro.scale.stacked import stacked_prune_regrow_threshold
 
     def mask_update(params, masks, batch, prune_rate):
         def dense_grad(p, b):
             return jax.grad(lambda q: api.train_loss(q, b)[0])(p)
 
         grads = jax.vmap(dense_grad)(params, batch)
-
-        def one(w, g, m):
-            # sparsifiable = matrix-shaped leaves; stacked norm scales /
-            # biases / dt vectors ((K, blocks, d)) stay dense, mirroring
-            # core.masks.default_sparsifiable on the unstacked tree
-            if w.ndim < 3 or w.shape[-1] < 64 or w.shape[-2] < 64:
-                return m, w
-            k = w.shape[0]
-            wf = w.reshape(k, -1).astype(jnp.float32)
-            gf = g.reshape(k, -1).astype(jnp.float32)
-            mf = m.reshape(k, -1).astype(jnp.float32)
-            n = wf.shape[1]
-            n_active = max(1, int(round(density * n)))
-            n_prune = jnp.ceil(prune_rate * n_active).astype(jnp.int32)
-            n_keep = n_active - n_prune
-            keep_sorted = jnp.sort(
-                jnp.where(mf > 0, jnp.abs(wf), -jnp.inf), axis=1)[:, ::-1]
-            w_th = jnp.take_along_axis(
-                keep_sorted,
-                jnp.broadcast_to(jnp.maximum(n_keep - 1, 0), (k,))[:, None],
-                axis=1)
-            grow_sorted = jnp.sort(
-                jnp.where(mf > 0, -jnp.inf, jnp.abs(gf)), axis=1)[:, ::-1]
-            g_th = jnp.take_along_axis(
-                grow_sorted,
-                jnp.broadcast_to(jnp.maximum(n_prune - 1, 0), (k,))[:, None],
-                axis=1)
-            keep = (mf > 0) & (jnp.abs(wf) >= w_th)
-            # |g| > 0 guard: zero-gradient coords (e.g. embedding rows not
-            # in the batch) must not mass-regrow when the threshold ties at 0
-            grown = (mf <= 0) & (jnp.abs(gf) >= g_th) & (jnp.abs(gf) > 0)
-            new_m = keep | grown
-            new_w = (wf * keep).astype(w.dtype).reshape(w.shape)
-            return new_m.astype(m.dtype).reshape(m.shape), new_w
-
-        out = jax.tree.map(one, params, grads, masks)
-        new_masks = jax.tree.map(lambda t: t[0], out,
-                                 is_leaf=lambda x: isinstance(x, tuple))
-        new_params = jax.tree.map(lambda t: t[1], out,
-                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_masks, new_params = stacked_prune_regrow_threshold(
+            params, masks, grads, prune_rate, density)
         return new_params, new_masks
 
     return mask_update

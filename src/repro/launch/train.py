@@ -63,7 +63,36 @@ def run_simulate(args) -> dict:
                                       every=args.checkpoint_every))
     if args.target > 0:
         callbacks.append(EarlyStopAtTarget(args.target))
-    if args.sim:
+    if args.scale:
+        from repro.scale import ScaleEngine
+
+        mesh = None
+        if args.mesh_shape:
+            from repro.launch.mesh import make_test_mesh
+
+            try:
+                dims = [int(x) for x in args.mesh_shape.lower().split("x")]
+            except ValueError:
+                dims = []
+            if len(dims) not in (2, 3):
+                raise SystemExit(
+                    f"--mesh-shape wants DATAxMODEL or PODSxDATAxMODEL, "
+                    f"got {args.mesh_shape!r}")
+            try:
+                if len(dims) == 2:
+                    mesh = make_test_mesh(data=dims[0], model=dims[1])
+                else:
+                    mesh = make_test_mesh(pods=dims[0], data=dims[1],
+                                          model=dims[2])
+            except ValueError as e:
+                raise SystemExit(
+                    f"cannot build mesh {args.mesh_shape}: {e}\n"
+                    "(on CPU, export XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=<n_devices> before launching)")
+        engine = ScaleEngine(
+            make_strategy(args.strategy), task, clients, cfg,
+            callbacks=callbacks, mesh=mesh, reduction=args.scale_reduction)
+    elif args.sim:
         from repro.sim import (
             AlwaysUp,
             BandwidthTrace,
@@ -267,6 +296,20 @@ def main() -> None:
                      help="restore engine state from this .npz and continue")
     sim.add_argument("--target", type=float, default=0.0,
                      help="early-stop once mean personalized acc >= target")
+    # client-sharded SPMD execution (repro.scale)
+    sim.add_argument("--scale", action="store_true",
+                     help="run through ScaleEngine: the whole round "
+                          "(mix + local phase + evolve) as one jitted "
+                          "stacked program (dispfl / dispfl_anneal / dpsgd)")
+    sim.add_argument("--mesh-shape", default="", dest="mesh_shape",
+                     help="shard the stacked client dim over a device mesh "
+                          "DATAxMODEL or PODSxDATAxMODEL (e.g. 8x1); on "
+                          "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                          "device_count first")
+    sim.add_argument("--scale-reduction", default="einsum",
+                     dest="scale_reduction", choices=["einsum", "ordered"],
+                     help="gossip fold: einsum = SPMD matmul (default), "
+                          "ordered = bit-exact reference accumulation order")
     # event-driven network simulation (repro.sim)
     sim.add_argument("--sim", action="store_true",
                      help="run through the event-driven network simulator")
@@ -333,6 +376,15 @@ def main() -> None:
 
     args = ap.parse_args()
     if args.mode == "simulate":
+        if args.scale and args.sim:
+            ap.error("--scale and --sim are mutually exclusive engines")
+        if not args.scale:
+            scale_only = {"--mesh-shape": bool(args.mesh_shape),
+                          "--scale-reduction":
+                              args.scale_reduction != "einsum"}
+            used = [f for f, on in scale_only.items() if on]
+            if used:
+                ap.error(f"{', '.join(used)} require(s) --scale")
         if not args.sim:
             sim_only = {"--async": args.sim_async,
                         "--staleness": args.staleness is not None,

@@ -1,0 +1,296 @@
+"""``ScaleEngine`` — the client-sharded SPMD round engine.
+
+One ``RoundEngine`` subclass whose entire round — gossip mix, local SGD
+phase, mask evolution — is a single jitted program over client-stacked
+state.  The Python-per-client work of the reference engine (its loop *and*
+its vmap fast path still mix/evolve eagerly per client) collapses into one
+XLA dispatch per round, and under a device mesh the leading K dim is
+sharded over the client axes (``sharding.rules.tree_stacked_shardings``) so
+GSPMD emits the gossip collectives — the K=256-clients-per-round regime.
+
+Semantics contract (the golden suite in tests/test_scale_engine.py):
+
+* round-0 state is bit-identical to ``RoundEngine`` (the adapter inits
+  through the base strategy's own ``init_state``);
+* all randomness (batch orders, evolve batches, topology) derives from the
+  same ``(seed, round, client)`` streams in the same draw order, so a
+  ``ScaleEngine`` checkpoint resumes bit-identically — and interchangeably
+  with ``RoundEngine`` (checkpoints are written in the engine's per-client
+  list layout);
+* with ``reduction="ordered"`` the gossip fold reproduces the reference
+  accumulation order and the whole trajectory — params, masks, metrics —
+  is bit-identical to ``RoundEngine(local_exec="loop")``;
+* with ``reduction="einsum"`` (the default: the SPMD matmul form) values
+  agree to fp reduction-order tolerance (~1e-6 relative per round) and the
+  documented golden criterion is: masks identical, per-round metrics within
+  tolerance.
+
+Constraints (checked at construction, with pointers back to RoundEngine):
+homogeneous client densities, all clients sharing one effective batch size
+(ragged step counts are fine — padded and live-masked exactly like the
+vmap fast path), and a strategy with a registered ``StackedStrategy``
+adapter (``dispfl``, ``dispfl_anneal``, ``dpsgd``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.base import FLResult, Task, _pad_order, evaluate_clients, rounds_to_targets
+from repro.fl.engine import Callback, RoundCtx, RoundEngine, RoundMetrics, StrategyBase
+from repro.core.accounting import CommReport, FlopsReport
+from repro.models.common import softmax_xent
+from repro.optim import SGDConfig
+from repro.scale.stacked import (
+    pack_stacked,
+    split_stacked,
+    stacked_local_phase,
+)
+from repro.scale.strategy import make_stacked
+
+PyTree = Any
+
+
+class ScaleEngine(RoundEngine):
+    """Runs a Strategy-zoo member as one compiled stacked round program.
+
+    Usage::
+
+        engine = ScaleEngine(make_strategy("dispfl"), task, clients, cfg,
+                             mesh=make_test_mesh(4, 1))   # or mesh=None
+        for m in engine.rounds():
+            ...
+        result = engine.result()
+
+    ``mesh=None`` runs the same single program on one device (still one
+    dispatch per round); with a mesh the stacked state and batches are
+    sharded over the client axes.  ``reduction`` picks the gossip fold:
+    ``"einsum"`` (SPMD matmul, default) or ``"ordered"`` (bit-exact
+    reference accumulation order).
+    """
+
+    def __init__(self, strategy: StrategyBase, task: Task, clients,
+                 cfg, callbacks: Sequence[Callback] = (),
+                 mesh=None, reduction: str = "einsum"):
+        # the base class wires strategy/task/clients/cfg and builds the
+        # per-client list state via the strategy's own init_state — the
+        # adapter then stacks it, so round-0 state matches RoundEngine
+        # bit for bit
+        super().__init__(strategy, task, clients, cfg, callbacks=callbacks,
+                         local_exec="loop")
+        self.adapter = make_stacked(strategy, reduction=reduction)
+        self.adapter.validate(cfg)
+        self.mesh = mesh
+        self._validate_clients()
+        self.state = self.adapter.stack_state(self.state)
+        self._opt = SGDConfig(momentum=cfg.momentum,
+                              weight_decay=cfg.weight_decay)
+        self._round_step = None
+
+    # ------------------------------------------------------------------
+    # construction-time checks
+    # ------------------------------------------------------------------
+    def _validate_clients(self) -> None:
+        cfg = self.cfg
+        bss = {min(cfg.batch_size, c.n_train) for c in self.clients}
+        if len(bss) != 1:
+            raise ValueError(
+                "ScaleEngine requires all clients to share one effective "
+                f"batch size (min(batch_size, n_train)); got {sorted(bss)} "
+                "— ragged *step counts* are fine (padded + masked), ragged "
+                "batch shapes are not; use RoundEngine")
+
+    # ------------------------------------------------------------------
+    # the compiled round step
+    # ------------------------------------------------------------------
+    def _build_round_step(self):
+        adapter = self.adapter
+        apply_fn = self.task.apply_fn
+        opt = self._opt
+        evolves = adapter.evolves
+
+        def loss(p, x, y):
+            return softmax_xent(apply_fn(p, x), y)
+
+        grad = jax.grad(loss)
+
+        def round_step(state, mix, bx, by, live, ev_x, ev_y, lr, counts):
+            state = adapter.stacked_mix(state, mix)
+            params = stacked_local_phase(
+                apply_fn, opt, state["params"], adapter.stacked_masks(state),
+                bx, by, live, lr)
+            state = {**state, "params": params}
+            if evolves:
+                grads = jax.vmap(grad)(params, ev_x, ev_y)
+                state = adapter.stacked_evolve(state, grads, counts)
+            return state
+
+        if self.mesh is None:
+            return jax.jit(round_step)
+
+        from jax.sharding import NamedSharding
+
+        from repro.sharding import use_mesh_rules
+        from repro.sharding.rules import stacked_spec, tree_stacked_shardings
+
+        mesh = self.mesh
+        state_sh = tree_stacked_shardings(self.state, mesh)
+
+        def shard_stacked(x):
+            # batches/live carry the same leading K dim as the state; pin
+            # them to the client axes so GSPMD keeps the whole round local
+            # to each client shard (modulo the gossip collectives)
+            if x is None:
+                return None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, stacked_spec(tuple(x.shape), mesh)))
+
+        def sharded_step(state, mix, bx, by, live, ev_x, ev_y, lr, counts):
+            return round_step(state, mix, shard_stacked(bx),
+                              shard_stacked(by), shard_stacked(live),
+                              shard_stacked(ev_x), shard_stacked(ev_y),
+                              lr, counts)
+
+        with use_mesh_rules(mesh):
+            return jax.jit(
+                sharded_step,
+                in_shardings=(state_sh,) + (None,) * 8,
+                out_shardings=state_sh,
+            )
+
+    def _step_fn(self):
+        if self._round_step is None:
+            self._round_step = self._build_round_step()
+        return self._round_step
+
+    # ------------------------------------------------------------------
+    # host-side per-round inputs (identical draws to the reference engine)
+    # ------------------------------------------------------------------
+    def _batch_schedule(self, ctx: RoundCtx):
+        """Stacked padded batch schedule — the same permutations, padding
+        and live-masking as ``RoundEngine._vmap_local_phase`` (and therefore
+        the same draws as the per-client reference loop)."""
+        cfg = self.cfg
+        epochs = self.strategy.local_epochs({}, ctx)
+        bs = min(cfg.batch_size, min(c.n_train for c in self.clients))
+        orders = []
+        for k in range(len(self.clients)):
+            rng = ctx.client_rng(k)
+            orders.append(np.concatenate(
+                [_pad_order(self.clients[k].n_train, bs, rng)
+                 for _ in range(epochs)]))
+        s_max = max(len(o) // bs for o in orders)
+        xb, yb, live = [], [], []
+        for k, order in enumerate(orders):
+            steps = len(order) // bs
+            c = self.clients[k]
+            padded = np.resize(order, s_max * bs)
+            xb.append(c.train_x[padded].reshape(
+                (s_max, bs) + c.train_x.shape[1:]))
+            yb.append(c.train_y[padded].reshape(s_max, bs))
+            live.append(np.arange(s_max) < steps)
+        return (jnp.asarray(np.stack(xb)), jnp.asarray(np.stack(yb)),
+                jnp.asarray(np.stack(live)))
+
+    def _evolve_batches(self, ctx: RoundCtx):
+        """The mask-search batches, drawn from the *same* per-client rng
+        stream right after the local-phase orders — exactly the draw order
+        of ``Strategy.evolve`` in the reference engine."""
+        bs = self.cfg.batch_size
+        xs, ys = [], []
+        for k, c in enumerate(self.clients):
+            xbk, ybk = c.sample_batch(ctx.client_rng(k), bs)
+            xs.append(xbk)
+            ys.append(ybk)
+        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+    # ------------------------------------------------------------------
+    # the round
+    # ------------------------------------------------------------------
+    def _run_one_round(self, t: int) -> RoundMetrics:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        ctx = self._make_ctx(t)
+        self._pre_round(ctx)
+
+        bx, by, live = self._batch_schedule(ctx)
+        if self.adapter.evolves:
+            ev_x, ev_y = self._evolve_batches(ctx)
+        else:
+            ev_x = ev_y = None
+        mix = jnp.asarray(self.adapter.mix_matrix(ctx))
+        counts = self.adapter.evolve_counts(ctx)
+        self.state = self._step_fn()(
+            self.state, mix, bx, by, live, ev_x, ev_y,
+            jnp.float32(ctx.lr), counts)
+
+        comm = self.adapter.round_comm(self.state, ctx)
+        flops = self.adapter.round_flops(ctx)
+        for key in self._comm:
+            self._comm[key].append(float(getattr(comm, key)))
+        for key in self._flops:
+            self._flops[key].append(float(getattr(flops, key)))
+
+        acc_mean = acc_std = None
+        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+            accs = evaluate_clients(
+                self.task, self.adapter.eval_params(self.state), self.clients)
+            acc_mean = float(np.mean(accs))
+            acc_std = float(np.std(accs))
+            self._acc_history.append(acc_mean)
+            self._acc_stds.append(acc_std)
+            self._eval_rounds.append(t)
+
+        self._next_round = t + 1
+        metrics = RoundMetrics(
+            round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
+            comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
+            flops_round=flops.per_round_flops,
+            cum_flops=float(np.sum(self._flops["per_round_flops"])),
+            acc_mean=acc_mean, acc_std=acc_std,
+            wall_s=time.perf_counter() - t0)
+        return self._finish_metrics(ctx, metrics)
+
+    # ------------------------------------------------------------------
+    # results / messages / checkpoints
+    # ------------------------------------------------------------------
+    def result(self, targets: Sequence[float] = (0.5,)) -> FLResult:
+        final = evaluate_clients(
+            self.task, self.adapter.eval_params(self.state), self.clients)
+        comm = CommReport(**{k: float(np.mean(v)) if v else 0.0
+                             for k, v in self._comm.items()})
+        flops = FlopsReport(**{k: float(np.mean(v)) if v else 0.0
+                               for k, v in self._flops.items()})
+        return FLResult(
+            acc_history=list(self._acc_history),
+            final_accs=final,
+            comm_busiest_mb=comm.busiest_mb, comm_rows=comm.row(),
+            flops_per_round=flops.per_round_flops, flops_rows=flops.row(),
+            rounds_to=rounds_to_targets(self._acc_history, list(targets)))
+
+    def snapshot_messages(self) -> list[dict]:
+        """Per-client packed payloads of the current stacked state — what
+        each client would put on the wire right now (codec-framable; dense
+        strategies ride all-ones bitmaps), via the stacked packed
+        container."""
+        masks = self.adapter.stacked_masks(self.state)
+        stacked = pack_stacked(self.state["params"], masks)
+        return [{"packed": p} for p in split_stacked(stacked)]
+
+    def _checkpoint_payload(self) -> dict:
+        # write checkpoints in the engine's per-client list layout, so
+        # ScaleEngine and RoundEngine archives are interchangeable
+        stacked = self.state
+        self.state = self.adapter.unstack_state(stacked)
+        try:
+            return super()._checkpoint_payload()
+        finally:
+            self.state = stacked
+
+    def _restore_payload(self, payload: dict) -> None:
+        super()._restore_payload(payload)
+        self.state = self.adapter.stack_state(self.state)

@@ -1,0 +1,546 @@
+"""Stacked-client state containers and the stacked compute primitives.
+
+Everything in this module operates on *client-stacked* pytrees: every leaf
+carries a leading ``K`` (client) dimension, so one jitted program expresses
+what the reference engine does with a Python loop over clients.  Under a
+mesh (``sharding.rules.tree_stacked_shardings``) the K dim is sharded over
+the client axes and GSPMD emits the collectives for the gossip fold.
+
+Primitives
+----------
+``masked_gossip_stacked``   DisPFL's intersection-weighted gossip as an
+                            adjacency-weighted masked fold over the K dim.
+                            ``reduction="einsum"`` is the fast SPMD form
+                            (one matmul per leaf; fp reduction order is
+                            XLA's); ``reduction="ordered"`` reproduces the
+                            reference engine's per-client accumulation
+                            order (own model first, then neighbors in
+                            ascending index) bit for bit — the form the
+                            golden-equivalence suite pins down.
+``plain_mix_stacked``       row-stochastic mixing (D-PSGD Metropolis), same
+                            two reductions.
+``stacked_local_phase``     the engine's vmap-over-clients local SGD scan
+                            (identical update rule, ragged schedules padded
+                            and live-masked, momentum as stacked state) as
+                            a *traceable* function, so it can fuse into the
+                            single round program.
+``stacked_evolve_exact``    Alg. 2 prune/regrow batched over clients with
+                            *traced* per-layer (n_keep, n_prune) counts —
+                            exact argsort top-k semantics (bit-identical to
+                            ``core.evolve.evolve_mask_layer``), and no
+                            recompilation when the cosine schedule or an
+                            annealed density changes the counts per round.
+``stacked_prune_regrow_threshold``
+                            the threshold-based variant for giant archs
+                            (sampled-sort thresholds, tie drift tolerated)
+                            — previously a private body inside
+                            ``launch/steps.make_mask_update_step``; it now
+                            lives here so there is exactly one stacked
+                            mask-search implementation.
+
+Stacked packed payloads
+-----------------------
+``StackedPacked`` is the K-client form of ``repro.sparse.PackedSparse``:
+bitmaps stacked ``(K, n_words)``, values right-padded to the max nnz with a
+``(K,)`` nnz vector.  ``pack_stacked``/``unpack_stacked`` round-trip a
+stacked state bit-exactly; ``split_stacked`` yields the K individual
+``PackedSparse`` trees (what actually crosses a link, codec-sized), and
+``fold_stacked`` accumulates a stacked payload into stacked (num, den)
+accumulators through ``repro.kernels.packed_accum`` (ref or Pallas
+backend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import softmax_xent
+from repro.optim import SGDConfig, masked_sgd_step, sgd_step
+from repro.sparse.packed import (
+    PackedSparse,
+    _is_packed,
+    _pack_bits,
+    _unpack_bits,
+    n_words,
+)
+from repro.utils.tree import tree_map_with_path
+
+PyTree = Any
+
+REDUCTIONS = ("einsum", "ordered")
+
+
+def _check_reduction(reduction: str) -> None:
+    if reduction not in REDUCTIONS:
+        raise ValueError(
+            f"reduction must be one of {REDUCTIONS}, got {reduction!r}")
+
+
+# ---------------------------------------------------------------------------
+# Stacked gossip folds
+# ---------------------------------------------------------------------------
+
+
+def masked_gossip_stacked(params: PyTree, masks: PyTree, adjacency: jax.Array,
+                          reduction: str = "einsum",
+                          accum_dtype=jnp.float32) -> PyTree:
+    """Intersection-weighted gossip over the stacked client dim.
+
+    ``adjacency`` is the (K, K) receive matrix with unit diagonal (client k
+    mixes the models of every j with A[k, j] > 0, itself included).
+
+    * ``"einsum"``: num/den are adjacency matmuls over K — the SPMD form
+      (GSPMD turns the K-sharded contraction into collectives).  XLA picks
+      the fp reduction order, so results match the reference engine to a
+      few ulps, not bitwise.
+    * ``"ordered"``: a fori-loop fold that adds contributions in exactly the
+      reference order (own model first, then senders in ascending index),
+      bit-identical to ``core.gossip.gossip_average_one`` per client.
+    """
+    _check_reduction(reduction)
+    a = adjacency.astype(accum_dtype)
+
+    if reduction == "einsum":
+
+        def one(w, m):
+            mf = m.astype(accum_dtype)
+            wf = w.astype(accum_dtype) * mf
+            num = jnp.einsum("kj,j...->k...", a, wf)
+            den = jnp.einsum("kj,j...->k...", a, mf)
+            mix = (num.astype(jnp.float32)
+                   / jnp.maximum(den.astype(jnp.float32), 1.0))
+            return (mix * m.astype(jnp.float32)).astype(w.dtype)
+
+        return jax.tree.map(one, params, masks)
+
+    k_clients = adjacency.shape[0]
+    # off-diagonal gate: sender j contributes to receiver k iff an edge
+    gate = a * (1.0 - jnp.eye(k_clients, dtype=accum_dtype))
+    gate = (gate > 0).astype(accum_dtype)
+
+    def one(w, m):
+        mf = m.astype(accum_dtype)
+        wf = w.astype(accum_dtype)
+        bshape = (k_clients,) + (1,) * (w.ndim - 1)
+
+        def body(j, carry):
+            num, den = carry
+            g = gate[:, j].reshape(bshape)
+            return (num + g * (wf[j] * mf[j]), den + g * mf[j])
+
+        num, den = jax.lax.fori_loop(0, k_clients, body, (wf * mf, mf))
+        mix = (num.astype(jnp.float32)
+               / jnp.maximum(den.astype(jnp.float32), 1.0))
+        return (mix * m.astype(jnp.float32)).astype(w.dtype)
+
+    return jax.tree.map(one, params, masks)
+
+
+def plain_mix_stacked(params: PyTree, mixing: jax.Array,
+                      reduction: str = "einsum") -> PyTree:
+    """Row-stochastic mixing ``w_k <- sum_j W[k, j] w_j`` over the K dim
+    (D-PSGD / Metropolis).  ``"ordered"`` adds terms in ascending sender
+    index, matching the reference engine's accumulation bit for bit."""
+    _check_reduction(reduction)
+    if reduction == "einsum":
+
+        def one(w):
+            return jnp.einsum("kj,j...->k...", mixing.astype(w.dtype), w)
+
+        return jax.tree.map(one, params)
+
+    k_clients = mixing.shape[0]
+
+    def one(w):
+        wm = mixing.astype(w.dtype)
+        bshape = (k_clients,) + (1,) * (w.ndim - 1)
+
+        def body(j, acc):
+            return acc + wm[:, j].reshape(bshape) * w[j]
+
+        return jax.lax.fori_loop(0, k_clients, body, jnp.zeros_like(w))
+
+    return jax.tree.map(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Stacked local phase (traceable; fuses into the single round program)
+# ---------------------------------------------------------------------------
+
+
+def stacked_local_phase(apply_fn: Callable, opt: SGDConfig, params: PyTree,
+                        masks: Optional[PyTree], bx: jax.Array, by: jax.Array,
+                        live: jax.Array, lr: jax.Array) -> PyTree:
+    """The engine's vmap local phase as a plain traceable function.
+
+    Identical semantics to ``RoundEngine._vmapped_fn``: a lax.scan over the
+    padded step schedule per client, masked/unmasked SGD steps from
+    ``repro.optim``, padded (non-live) steps are exact no-ops, momentum is
+    zero-initialized stacked per-client state.
+    """
+
+    def loss(p, x, y):
+        return softmax_xent(apply_fn(p, x), y)
+
+    grad = jax.grad(loss)
+    use_mask = masks is not None
+
+    def per_client(p, m, cx, cy, lv):
+        def body(carry, xyl):
+            w, st = carry
+            x, y, alive = xyl
+            g = grad(w, x, y)
+            if use_mask:
+                w2, st2 = masked_sgd_step(w, g, m, st, opt, lr)
+            else:
+                w2, st2 = sgd_step(w, g, st, opt, lr)
+            w = jax.tree.map(lambda o, nn: jnp.where(alive, nn, o), w, w2)
+            st = jax.tree.map(lambda o, nn: jnp.where(alive, nn, o), st, st2)
+            return (w, st), None
+
+        st0 = ({"mu": jax.tree.map(jnp.zeros_like, p)}
+               if opt.momentum != 0.0 else {})
+        (p, _), _ = jax.lax.scan(body, (p, st0), (cx, cy, lv))
+        return p
+
+    if use_mask:
+        return jax.vmap(per_client)(params, masks, bx, by, live)
+    return jax.vmap(
+        lambda p, cx, cy, lv: per_client(p, None, cx, cy, lv))(
+            params, bx, by, live)
+
+
+# ---------------------------------------------------------------------------
+# Stacked mask evolution — exact (golden) and threshold (giant-arch) forms
+# ---------------------------------------------------------------------------
+
+
+def _topk_rows(scores: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-row {0,1} selection of the ``k`` largest scores, exact count and
+    argsort tie-breaking identical to ``core.evolve._exact_topk_mask``, but
+    with ``k`` *traced* (rank < k instead of a static scatter slice)."""
+    n = scores.shape[1]
+    order = jnp.argsort(-scores, axis=1)
+    rows = jnp.arange(scores.shape[0])[:, None]
+    ranks = jnp.zeros(scores.shape, jnp.int32).at[rows, order].set(
+        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), scores.shape))
+    return (ranks < k).astype(jnp.float32)
+
+
+def stacked_evolve_exact(params: PyTree, masks: PyTree, grads: PyTree,
+                         counts: dict) -> tuple[PyTree, PyTree]:
+    """Alg. 2 (magnitude prune + gradient regrow), batched over the K dim.
+
+    ``counts`` maps sparsifiable leaf paths (unstacked convention, e.g.
+    ``"conv0/w"``) to traced ``(n_keep, n_prune)`` int32 scalars — the same
+    integers the reference computes from ``(prune_rate, n_active)`` with
+    ``math.ceil`` on the host, so the cosine schedule (and dispfl_anneal's
+    per-round ERK budgets) never trigger a recompile.  Leaves without an
+    entry pass through unchanged.  Bit-identical per client to
+    ``core.evolve.evolve_mask_layer``.
+    """
+
+    def one(path, w, m, g):
+        if path not in counts:
+            return m, w
+        n_keep, n_prune = counts[path]
+        kdim = w.shape[0]
+        mf = m.reshape(kdim, -1).astype(jnp.float32)
+        wf = w.reshape(kdim, -1).astype(jnp.float32)
+        gf = g.reshape(kdim, -1).astype(jnp.float32)
+        neg_inf = jnp.float32(-jnp.inf)
+        keep_scores = jnp.where(mf > 0, jnp.abs(wf), neg_inf)
+        m_half = _topk_rows(keep_scores, n_keep)
+        grow_scores = jnp.where(m_half > 0, neg_inf, jnp.abs(gf))
+        grown = _topk_rows(grow_scores, n_prune)
+        new_m = (m_half + grown).reshape(w.shape)
+        new_w = w * new_m.astype(w.dtype)
+        return new_m.astype(m.dtype), new_w
+
+    paired = tree_map_with_path(one, params, masks, grads)
+    is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+    new_masks = jax.tree.map(lambda t: t[0], paired, is_leaf=is_pair)
+    new_params = jax.tree.map(lambda t: t[1], paired, is_leaf=is_pair)
+    return new_masks, new_params
+
+
+def evolve_counts_for(budgets: dict[str, int], prune_rate: float) -> dict:
+    """Host-side per-round counts: the exact ``(n_keep, n_prune)`` integers
+    the reference derives per layer (``math.ceil`` on the host float, so no
+    f32 rounding drift against ``core.evolve.evolve_mask_layer``)."""
+    import math
+
+    out = {}
+    for path, n_active in budgets.items():
+        n_prune = int(math.ceil(prune_rate * n_active))
+        out[path] = (jnp.int32(n_active - n_prune), jnp.int32(n_prune))
+    return out
+
+
+def default_threshold_sparsifiable(w: jax.Array) -> bool:
+    """Matrix-shaped stacked leaves; stacked norm scales / biases / dt
+    vectors stay dense (mirrors ``core.masks.default_sparsifiable`` on the
+    unstacked tree)."""
+    return w.ndim >= 3 and w.shape[-1] >= 64 and w.shape[-2] >= 64
+
+
+def stacked_prune_regrow_threshold(
+    params: PyTree, masks: PyTree, grads: PyTree, prune_rate: jax.Array,
+    density: float,
+    sparsifiable: Callable[[jax.Array], bool] = default_threshold_sparsifiable,
+) -> tuple[PyTree, PyTree]:
+    """Threshold-based stacked prune/regrow for giant archs.
+
+    Per client and leaf: kth-order-statistic thresholds via sort (identical
+    semantics to ``kernels/ops.prune_regrow`` up to ties).  Layer budgets
+    are static (``density`` x numel) so the program is shape-static; the
+    |g| > 0 guard keeps zero-gradient coordinates (embedding rows absent
+    from the batch) from mass-regrowing on threshold ties at 0.  This is
+    the sampled-threshold counterpart of ``stacked_evolve_exact`` — tie
+    drift tolerated, no exact-count guarantee — practical for leaves where
+    an argsort-based exact top-k would dominate the step.
+    """
+
+    def one(w, g, m):
+        if not sparsifiable(w):
+            return m, w
+        k = w.shape[0]
+        wf = w.reshape(k, -1).astype(jnp.float32)
+        gf = g.reshape(k, -1).astype(jnp.float32)
+        mf = m.reshape(k, -1).astype(jnp.float32)
+        n = wf.shape[1]
+        n_active = max(1, int(round(density * n)))
+        n_prune = jnp.ceil(prune_rate * n_active).astype(jnp.int32)
+        n_keep = n_active - n_prune
+        keep_sorted = jnp.sort(
+            jnp.where(mf > 0, jnp.abs(wf), -jnp.inf), axis=1)[:, ::-1]
+        w_th = jnp.take_along_axis(
+            keep_sorted,
+            jnp.broadcast_to(jnp.maximum(n_keep - 1, 0), (k,))[:, None],
+            axis=1)
+        grow_sorted = jnp.sort(
+            jnp.where(mf > 0, -jnp.inf, jnp.abs(gf)), axis=1)[:, ::-1]
+        g_th = jnp.take_along_axis(
+            grow_sorted,
+            jnp.broadcast_to(jnp.maximum(n_prune - 1, 0), (k,))[:, None],
+            axis=1)
+        keep = (mf > 0) & (jnp.abs(wf) >= w_th)
+        grown = (mf <= 0) & (jnp.abs(gf) >= g_th) & (jnp.abs(gf) > 0)
+        new_m = keep | grown
+        new_w = (wf * keep).astype(w.dtype).reshape(w.shape)
+        return new_m.astype(m.dtype).reshape(m.shape), new_w
+
+    paired = jax.tree.map(one, params, grads, masks)
+    is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+    new_masks = jax.tree.map(lambda t: t[0], paired, is_leaf=is_pair)
+    new_params = jax.tree.map(lambda t: t[1], paired, is_leaf=is_pair)
+    return new_masks, new_params
+
+
+# ---------------------------------------------------------------------------
+# Stacked packed payloads
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackedPacked:
+    """K clients' packed messages for one leaf, in stacked form.
+
+    ``bitmap`` is (K, n_words) uint32; ``values`` is (K, max_nnz) with each
+    client's held values left-aligned and zero right-padding; ``nnz`` is
+    the (K,) true counts.  ``shape`` is the *per-client* dense leaf shape
+    (static aux data)."""
+
+    bitmap: jax.Array
+    values: jax.Array
+    nnz: jax.Array
+    shape: tuple[int, ...]
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.bitmap.shape[0])
+
+    @property
+    def n_coords(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def tree_flatten(self):
+        return (self.bitmap, self.values, self.nnz), (tuple(self.shape),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bitmap, values, nnz = children
+        return cls(bitmap=bitmap, values=values, nnz=nnz, shape=aux[0])
+
+
+def _is_stacked_packed(x) -> bool:
+    return isinstance(x, StackedPacked)
+
+
+def pack_stacked(stacked_params: PyTree, stacked_masks: Optional[PyTree] = None,
+                 dtype=None) -> PyTree:
+    """Pack a stacked (K-leading) state into ``StackedPacked`` leaves.
+
+    Eager, data-dependent-shape (message-boundary) work — the stacked
+    analogue of ``sparse.pack_tree``; ``masks=None`` packs dense (all-ones
+    bitmaps, max_nnz = n_coords)."""
+
+    def one(w, m):
+        w = np.asarray(w)
+        kdim = w.shape[0]
+        shape = tuple(w.shape[1:])
+        flat = w.reshape(kdim, -1)
+        if m is None:
+            flags = np.ones(flat.shape, dtype=bool)
+        else:
+            flags = np.asarray(m).reshape(kdim, -1) != 0
+        nnz = flags.sum(axis=1).astype(np.int32)
+        width = int(nnz.max()) if kdim else 0
+        vals = np.zeros((kdim, width),
+                        dtype=flat.dtype if dtype is None else dtype)
+        words = np.zeros((kdim, n_words(flat.shape[1])), dtype=np.uint32)
+        for k in range(kdim):
+            held = flat[k][flags[k]]
+            vals[k, : nnz[k]] = held if dtype is None else held.astype(dtype)
+            words[k] = _pack_bits(flags[k])
+        return StackedPacked(bitmap=jnp.asarray(words),
+                             values=jnp.asarray(vals),
+                             nnz=jnp.asarray(nnz), shape=shape)
+
+    if stacked_masks is None:
+        return jax.tree.map(lambda w: one(w, None), stacked_params)
+    return jax.tree.map(one, stacked_params, stacked_masks)
+
+
+def unpack_stacked(packed: PyTree) -> PyTree:
+    """Dense stacked state from ``StackedPacked`` leaves (exact zeros off
+    the bitmaps — ``unpack_stacked(pack_stacked(w, m)) == w ⊙ m``)."""
+
+    def one(sp: StackedPacked):
+        kdim = sp.n_clients
+        out = np.zeros((kdim, sp.n_coords),
+                       dtype=np.asarray(sp.values).dtype)
+        words = np.asarray(sp.bitmap)
+        vals = np.asarray(sp.values)
+        nnz = np.asarray(sp.nnz)
+        for k in range(kdim):
+            flags = _unpack_bits(words[k], sp.n_coords)
+            out[k, flags] = vals[k, : nnz[k]]
+        return jnp.asarray(out.reshape((kdim,) + sp.shape))
+
+    return jax.tree.map(one, packed, is_leaf=_is_stacked_packed)
+
+
+def split_stacked(packed: PyTree) -> list[PyTree]:
+    """The K individual ``PackedSparse`` trees of a stacked payload — what
+    physically crosses a link (codec-framable, padding stripped)."""
+    leaves = jax.tree.leaves(packed, is_leaf=_is_stacked_packed)
+    if not leaves:
+        return []
+    kdim = leaves[0].n_clients
+
+    def one_client(k):
+        return jax.tree.map(
+            lambda sp: PackedSparse(
+                bitmap=sp.bitmap[k],
+                values=sp.values[k, : int(sp.nnz[k])],
+                shape=sp.shape),
+            packed, is_leaf=_is_stacked_packed)
+
+    return [one_client(k) for k in range(kdim)]
+
+
+def stack_payloads(payloads: Sequence[PyTree]) -> PyTree:
+    """Inverse of ``split_stacked``: K ``PackedSparse`` trees (identical
+    structure/shapes, possibly ragged nnz) into one ``StackedPacked``."""
+
+    def one(*leaves: PackedSparse):
+        nnz = np.asarray([p.nnz for p in leaves], dtype=np.int32)
+        width = int(nnz.max()) if leaves else 0
+        vals = np.zeros((len(leaves), width),
+                        dtype=np.asarray(leaves[0].values).dtype)
+        for k, p in enumerate(leaves):
+            vals[k, : nnz[k]] = np.asarray(p.values)
+        return StackedPacked(
+            bitmap=jnp.stack([p.bitmap for p in leaves]),
+            values=jnp.asarray(vals), nnz=jnp.asarray(nnz),
+            shape=leaves[0].shape)
+
+    return jax.tree.map(one, *payloads, is_leaf=_is_packed)
+
+
+def _fold_rows_pallas(nu: jax.Array, de: jax.Array, sp: StackedPacked,
+                      alpha: float) -> tuple[jax.Array, jax.Array]:
+    """One-launch stacked fold via ``kernels.packed_accum.packed_accum_rows``
+    (grid = clients x coordinate blocks)."""
+    from repro.kernels.packed_accum import BLOCK_N, packed_accum_rows
+
+    kdim = sp.n_clients
+    n = sp.n_coords
+    pad = (-n) % BLOCK_N
+    n_pad = n + pad
+    words = np.zeros((kdim, n_pad // 32), dtype=np.uint32)
+    words[:, : n_words(n)] = np.asarray(sp.bitmap)
+    vals_in = np.asarray(sp.values)
+    vals = np.zeros((kdim, vals_in.shape[1] + BLOCK_N), dtype=vals_in.dtype)
+    vals[:, : vals_in.shape[1]] = vals_in
+    # per-client exclusive prefixes of per-block popcounts (host, tiny)
+    offsets = np.zeros((kdim, n_pad // BLOCK_N), dtype=np.int32)
+    for k in range(kdim):
+        pc = _unpack_bits(words[k], n_pad).reshape(-1, BLOCK_N).sum(axis=1)
+        offsets[k] = np.concatenate([[0], np.cumsum(pc)[:-1]])
+    shape = (kdim,) + sp.shape
+    numf = jnp.pad(nu.reshape(kdim, -1).astype(jnp.float32), ((0, 0), (0, pad)))
+    denf = jnp.pad(de.reshape(kdim, -1).astype(jnp.float32), ((0, 0), (0, pad)))
+    num2, den2 = packed_accum_rows(
+        numf, denf, jnp.asarray(words), jnp.asarray(vals),
+        jnp.asarray(offsets), jnp.float32(alpha))
+    return (num2[:, :n].reshape(shape).astype(nu.dtype),
+            den2[:, :n].reshape(shape).astype(de.dtype))
+
+
+def fold_stacked(num: PyTree, den: PyTree, packed: PyTree, alpha: float = 1.0,
+                 backend: str = "ref") -> tuple[PyTree, PyTree]:
+    """Fold a stacked payload into stacked (num, den) accumulators —
+    client k's payload into accumulator row k.  Backends: ``"ref"`` /
+    ``"pallas"`` loop clients through the same per-payload
+    ``repro.sparse.ops.accumulate`` fold the per-client mix uses;
+    ``"pallas_rows"`` launches the batched ``packed_accum_rows`` kernel
+    once per leaf (grid = clients x blocks)."""
+    from repro.sparse.ops import accumulate
+
+    def one(nu, de, sp: StackedPacked):
+        if backend == "pallas_rows":
+            return _fold_rows_pallas(nu, de, sp, alpha)
+        rows_n, rows_d = [], []
+        for k in range(sp.n_clients):
+            ps = PackedSparse(bitmap=sp.bitmap[k],
+                              values=sp.values[k, : int(sp.nnz[k])],
+                              shape=sp.shape)
+            rn, rd = accumulate(nu[k], de[k], ps, alpha, backend)
+            rows_n.append(rn)
+            rows_d.append(rd)
+        return jnp.stack(rows_n), jnp.stack(rows_d)
+
+    paired = jax.tree.map(one, num, den, packed,
+                          is_leaf=lambda x: _is_stacked_packed(x))
+    is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+    new_num = jax.tree.map(lambda t: t[0], paired, is_leaf=is_pair)
+    new_den = jax.tree.map(lambda t: t[1], paired, is_leaf=is_pair)
+    return new_num, new_den
+
+
+def stacked_nnz_per_client(stacked_masks: PyTree) -> list[int]:
+    """Per-client nnz of a stacked mask tree (the comm-accounting input)."""
+    total = None
+    for leaf in jax.tree.leaves(stacked_masks):
+        kdim = leaf.shape[0]
+        counts = np.asarray(
+            jnp.sum(jnp.reshape(leaf != 0, (kdim, -1)), axis=1))
+        total = counts if total is None else total + counts
+    return [int(c) for c in total]

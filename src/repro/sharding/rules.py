@@ -139,6 +139,31 @@ def batch_spec(path: str, shape: tuple, mesh: Mesh, fsdp2d: bool = False) -> P:
     return P(*([client] + rest))
 
 
+def stacked_spec(shape: tuple, mesh: Mesh, fsdp2d: bool = False) -> P:
+    """Client-dim-only PartitionSpec for a stacked (K-leading) leaf.
+
+    This is the layout of ``repro.scale`` state and batches: the leading K
+    dim rides the client axes (trimmed until they divide K), every other
+    dim stays unsharded — per-client tensors are small; it is the *count*
+    of clients that scales.  Contrast ``param_spec``, which additionally
+    TP/FSDP-shards the body dims for the giant-arch plans."""
+    client = _client_axes(mesh, fsdp2d, shape[0] if shape else None)
+    return P(*([client] + [None] * (len(shape) - 1)))
+
+
+def stacked_sharding(shape: tuple, mesh: Mesh,
+                     fsdp2d: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, stacked_spec(shape, mesh, fsdp2d))
+
+
+def tree_stacked_shardings(tree: PyTree, mesh: Mesh,
+                           fsdp2d: bool = False) -> PyTree:
+    """Shardings for a whole stacked state pytree (params/masks/opt-state
+    with a leading K dim) — the ``repro.scale`` engine's state layout."""
+    return jax.tree.map(
+        lambda x: stacked_sharding(tuple(x.shape), mesh, fsdp2d), tree)
+
+
 def tree_param_shardings(tree: PyTree, mesh: Mesh, fsdp2d: bool,
                          stacked: bool = True) -> PyTree:
     return tree_map_with_path(

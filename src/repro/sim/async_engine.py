@@ -614,6 +614,18 @@ class SimEngine(RoundEngine):
         st = self._as
         self._stop = False
 
+        # extend-on-resume: a *finished* run restored with a larger
+        # cfg.rounds re-arms its retired clients instead of silently ending
+        # — each gets a fresh WAKE at the restored virtual clock (dead
+        # clients stay dead; mid-run resume is untouched because a client
+        # only retires once t_local reaches the old cfg.rounds)
+        revived = sorted(k for k in st.done
+                         if k not in st.dead
+                         and int(st.t_local[k]) < cfg.rounds)
+        for k in revived:
+            st.done.discard(k)
+            st.q.push(self.clock.now, WAKE, k=k)
+
         def flops_at(t: int) -> float:
             ctx = self._make_ctx(int(t))
             return strat.round_flops(self.state, ctx).per_round_flops

@@ -445,3 +445,41 @@ def test_checkpoint_resume_bit_identical(mode, kw, setup, tmp_path):
     assert resumed.stats.n_lost == ref.stats.n_lost
     assert np.array_equal(resumed.uplink.free_at, ref.uplink.free_at)
     assert resumed.report((0.0,)).to_dict() == ref.report((0.0,)).to_dict()
+
+
+def test_async_finished_run_extends_on_resume(setup, tmp_path):
+    """Resuming a *finished* async run with a larger cfg.rounds re-arms the
+    retired clients' WAKE events and emits the additional rounds (the old
+    behaviour was to end silently); the extension is deterministic."""
+    import dataclasses
+
+    task, clients, cfg = setup
+    path = str(tmp_path / "finished.npz")
+
+    def build(rounds):
+        c = dataclasses.replace(cfg, rounds=rounds)
+        return SimEngine(make_strategy("dispfl"), task, clients, c,
+                         mode="async", staleness=2)
+
+    eng = build(2)
+    first = [m.round for m in eng.rounds()]
+    assert first == [0, 1]
+    eng.save(path)
+
+    extended = build(4).restore(path)
+    more = [m.round for m in extended.rounds()]
+    assert more == [2, 3]
+    assert all(int(t) == 4 for t in extended._as.t_local)
+    assert len(extended._acc_history) == 4
+    assert extended.clock.now > eng.clock.now
+
+    # deterministic: a second extension from the same archive is identical
+    again = build(4).restore(path)
+    assert [m.round for m in again.rounds()] == more
+    assert _trees_equal(again.state, extended.state)
+    assert again.clock.now == extended.clock.now
+
+    # resuming with the ORIGINAL rounds still ends immediately (no rounds
+    # fabricated), and a restored-but-not-extended engine stays finished
+    same = build(2).restore(path)
+    assert list(same.rounds()) == []

@@ -354,3 +354,58 @@ def test_anneal_density_schedule_endpoints():
     assert annealed_density(0.5, 0.125, 100, 100) == pytest.approx(0.125)
     with pytest.raises(ValueError):
         annealed_density(0.5, 0.6, 0, 10)
+
+
+# ---------------------------------------------------------------------------
+# fp16 wire payloads: dispfl(payload_dtype="fp16")
+# ---------------------------------------------------------------------------
+
+
+def test_dispfl_fp16_payload_cast_tolerant_golden(setup):
+    """The cast-tolerant golden contract: shipping fp16 values changes no
+    bitmap (masks bit-identical to the fp32 run) and perturbs the
+    trajectory only within fp16 tolerance."""
+    task, clients, cfg = setup
+    a = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                    local_exec="loop")
+    ra = a.run()
+    b = RoundEngine(make_strategy("dispfl", payload_dtype="fp16"),
+                    task, clients, cfg, local_exec="loop")
+    rb = b.run()
+    assert _trees_equal(a.state["masks"], b.state["masks"])
+    for x, y in zip(jax.tree.leaves(a.state["params"]),
+                    jax.tree.leaves(b.state["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=5e-3, rtol=0)
+    np.testing.assert_allclose(rb.acc_history, ra.acc_history, atol=5e-2)
+
+
+def test_dispfl_fp16_codec_frame_is_half_the_values(setup):
+    """Wire contract: the fp16 frame == header + bitmap + 2*nnz — exactly
+    2 bytes/value less than the fp32 frame (the bitmap is dtype-free)."""
+    task, clients, cfg = setup
+    s32 = make_strategy("dispfl")
+    s16 = make_strategy("dispfl", payload_dtype="fp16")
+    st32 = s32.init_state(task, clients, cfg)
+    st16 = s16.init_state(task, clients, cfg)
+    p32 = s32.snapshot_message(st32, 0)["packed"]
+    p16 = s16.snapshot_message(st16, 0)["packed"]
+    nnz = tree_packed_nnz(p16)
+    assert tree_packed_nnz(p32) == nnz          # identical bitmaps
+    assert encoded_nbytes(p32) == message_bytes(
+        s32.message_nnz(st32, 0), s32.message_coords(st32, 0),
+        with_bitmap=True)
+    assert encoded_nbytes(p32) - encoded_nbytes(p16) == 2 * nnz
+    assert encoded_nbytes(p16) == len(encode(p16))
+    # the simulator stamps the halved frame automatically
+    from repro.sim.links import measure_payload
+    _, wire16 = measure_payload({"packed": p16})
+    _, wire32 = measure_payload({"packed": p32})
+    assert wire32 - wire16 == 2 * nnz
+
+
+def test_dispfl_fp16_requires_packed():
+    with pytest.raises(ValueError, match="packed=True"):
+        make_strategy("dispfl", packed=False, payload_dtype="fp16")
+    with pytest.raises(ValueError, match="fp32|fp16"):
+        make_strategy("dispfl", payload_dtype="bf16")
