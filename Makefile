@@ -9,6 +9,8 @@
 #   make scale-smoke - ScaleEngine smoke: the whole round as one jitted
 #                      stacked program, K=8 sharded over 4 host devices
 #   make codec-smoke - packed payload codec/gossip benchmark (bytes vs density)
+#   make serve-smoke - multi-tenant serving smoke: packed store + slot-pool
+#                      cache + batched masked-matmul launches over the CLI
 #   make bench-gate  - benchmark regression gate: fresh codec/vmap/sim rows
 #                      vs benchmarks/baselines/*.json (CI full job; refresh
 #                      deliberately with `python -m benchmarks.check_regression
@@ -16,9 +18,10 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test tier1 smoke sim-smoke scale-smoke codec-smoke bench-gate
+.PHONY: verify test tier1 smoke sim-smoke scale-smoke codec-smoke \
+	serve-smoke bench-gate
 
-verify: test smoke sim-smoke scale-smoke codec-smoke
+verify: test smoke sim-smoke scale-smoke codec-smoke serve-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -44,6 +47,10 @@ scale-smoke:
 
 codec-smoke:
 	$(PY) -m benchmarks.run --only sparse_codec
+
+serve-smoke:
+	$(PY) -m repro.launch.serve --users 16 --cache-size 8 --max-batch 8 \
+	    --requests 64 --backend ref --model mlp --density 0.3
 
 bench-gate:
 	$(PY) -m benchmarks.check_regression --out BENCH_latest.json

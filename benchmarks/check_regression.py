@@ -35,7 +35,8 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 #: modules under the gate (a subset of benchmarks.run.MODULES: the ones
 #: whose rows are stable enough to be a contract)
-MODULES = ["sparse_codec", "engine_vmap", "scale_engine", "sim_faults"]
+MODULES = ["sparse_codec", "engine_vmap", "scale_engine", "sim_faults",
+           "serve_bench"]
 
 # metric -> rule.  kinds:
 #   close      |new - base| <= atol + rtol * |base|
@@ -77,8 +78,26 @@ _RULES: dict[str, dict] = {
     "clean_retrans_MB": {"kind": "exact"},
     "same_trajectory": {"kind": "exact"},
     "fifo_stretches_clock": {"kind": "exact"},
+    # serve: batched multi-tenant serving must keep >=2x over the per-user
+    # dense loop (the repro.serve acceptance floor); storage ratios and
+    # cache behaviour are deterministic functions of (seed, density);
+    # raw requests/s are machine-dependent and intentionally ungated —
+    # the speedup ratio is the machine-independent contract
+    "speedup_vs_dense": {"kind": "floor", "abs_floor": 2.0, "frac": 0.4},
+    "users": {"kind": "exact"},
+    "density": {"kind": "exact"},
+    "requests": {"kind": "exact"},
+    "mean_batch": {"kind": "close", "rtol": 0.05, "atol": 0.5},
+    "cache_hit_rate": {"kind": "close", "rtol": 0.0, "atol": 0.01},
+    "bytes_at_rest": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "dense_bytes_at_rest": {"kind": "close", "rtol": 0.01, "atol": 0},
+    "at_rest_ratio": {"kind": "close", "rtol": 0.02, "atol": 0.01},
     # wall-clock: machine noise — catch only blowups
     "us_per_call": {"kind": "timing", "max_ratio": 8.0},
+    "p50_ms": {"kind": "timing", "max_ratio": 8.0},
+    "p99_ms": {"kind": "timing", "max_ratio": 8.0},
+    "dense_p50_ms": {"kind": "timing", "max_ratio": 8.0},
+    "dense_p99_ms": {"kind": "timing", "max_ratio": 8.0},
     "pack_us": {"kind": "timing", "max_ratio": 8.0},
     "encode_decode_us": {"kind": "timing", "max_ratio": 8.0},
     "unpack_us": {"kind": "timing", "max_ratio": 8.0},

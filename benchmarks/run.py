@@ -29,6 +29,7 @@ MODULES = [
     "sparse_codec",      # §Sparse: packed payload throughput + bytes vs density
     "engine_vmap",       # §Perf: loop vs vmap local phase at K>=16
     "scale_engine",      # §Scale: one-program stacked round vs loop engine
+    "serve_bench",       # §Serve: batched multi-tenant serving vs dense loop
     "roofline",          # dry-run roofline aggregation
 ]
 

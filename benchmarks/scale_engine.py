@@ -46,10 +46,16 @@ def _setup(k: int, fast: bool):
 
 
 def run(fast: bool = True) -> list[dict]:
+    import jax
+
     from repro.fl import RoundEngine, make_strategy
     from repro.scale import ScaleEngine
     from repro.sparse import encoded_nbytes
 
+    # measurement isolation: earlier modules (engine_vmap runs the same
+    # loop local phase) leave warm jit caches that flatter whichever
+    # engine reuses them — the A/B ratio must compile from cold
+    jax.clear_caches()
     rows = []
     for k in ((16, 64) if fast else (16, 64, 128)):
         task, clients, cfg = _setup(k, fast)

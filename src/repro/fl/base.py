@@ -47,6 +47,18 @@ class Task:
             lambda params, x, y: jnp.mean(
                 (jnp.argmax(self.apply_fn(params, x), -1) == y)))
 
+        def acc_one(params, x, y, live):
+            correct = ((jnp.argmax(self.apply_fn(params, x), -1) == y)
+                       & live).astype(jnp.float32)
+            # sum * (1/n), not sum / n: XLA strength-reduces _acc's
+            # divide-by-constant into a reciprocal multiply, and the
+            # stacked eval must round identically to stay bit-equal to
+            # the per-client loop
+            n = jnp.sum(live.astype(jnp.float32))
+            return jnp.sum(correct) * (jnp.float32(1.0) / n)
+
+        self._acc_stacked = jax.jit(jax.vmap(acc_one))
+
     def value_and_grad(self, params, x, y):
         return self._vg(params, jnp.asarray(x), jnp.asarray(y))
 
@@ -194,6 +206,42 @@ def evaluate_clients(task: Task, client_params: list[PyTree], clients) -> list[f
         task.accuracy(p, c.test_x, c.test_y)
         for p, c in zip(client_params, clients)
     ]
+
+
+def stack_eval_arrays(clients) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pad the K ragged test sets to one (K, L, ...) batch for stacked eval.
+
+    Padding wraps each client's own test set (so padded rows are valid
+    inputs, never zeros) and a (K, L) ``live`` mask marks the real rows.
+    Build once and reuse — these arrays are round-invariant.
+    """
+    L = max(len(c.test_y) for c in clients)
+    xs, ys, lives = [], [], []
+    for c in clients:
+        n = len(c.test_y)
+        idx = np.resize(np.arange(n), L)
+        xs.append(c.test_x[idx])
+        ys.append(c.test_y[idx])
+        lives.append(np.arange(L) < n)
+    return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+            jnp.asarray(np.stack(lives)))
+
+
+def evaluate_clients_stacked(task: Task, stacked_params: PyTree, clients,
+                             arrays=None) -> list[float]:
+    """One vmapped launch replacing the per-client host eval loop.
+
+    Per client this computes ``sum(correct ∧ live) / sum(live)`` — the live
+    count is exactly ``len(test_y)`` and 0/1 sums are exact in fp32, so the
+    result matches ``evaluate_clients`` bit for bit (golden-tested in
+    tests/test_scale_engine.py).  ``arrays`` is an optional pre-built
+    ``stack_eval_arrays(clients)`` to amortize the padding across rounds.
+    """
+    if arrays is None:
+        arrays = stack_eval_arrays(clients)
+    x, y, live = arrays
+    accs = task._acc_stacked(stacked_params, x, y, live)
+    return [float(a) for a in accs]
 
 
 def rounds_to_targets(history: list[float], targets: list[float]) -> dict[float, int]:

@@ -15,7 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gossip_avg import gossip_avg_flat
-from repro.kernels.masked_matmul import masked_matmul as _masked_matmul_tiled
+from repro.kernels.masked_matmul import (
+    batched_masked_matmul as _batched_masked_matmul_tiled,
+    masked_matmul as _masked_matmul_tiled,
+)
 from repro.kernels.prune_regrow import prune_regrow_flat
 
 PyTree = Any
@@ -69,6 +72,24 @@ def masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array,
     y = _masked_matmul_tiled(xp, wp, mp, bm=bm, bn=bn, bk=bk,
                              interpret=interpret)
     return y[:m_dim, :n_dim]
+
+
+def batched_masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array,
+                          bm: int = 128, bn: int = 128, bk: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """y[u] = x[u] @ (w[u] ⊙ mask[u]) in one launch — the multi-tenant
+    serving matmul (repro.serve).  Pads M/K/N to tile multiples; the user
+    dim U is a grid dimension, never padded."""
+    u_dim, m_dim, k_dim = x.shape
+    u2, k2, n_dim = w.shape
+    assert (u_dim, k_dim) == (u2, k2), ((u_dim, k_dim), (u2, k2))
+    pm, pk, pn = (-m_dim) % bm, (-k_dim) % bk, (-n_dim) % bn
+    xp = jnp.pad(x, ((0, 0), (0, pm), (0, pk)))
+    wp = jnp.pad(w, ((0, 0), (0, pk), (0, pn)))
+    mp = jnp.pad(mask, ((0, 0), (0, pk), (0, pn)))
+    y = _batched_masked_matmul_tiled(xp, wp, mp, bm=bm, bn=bn, bk=bk,
+                                     interpret=interpret)
+    return y[:, :m_dim, :n_dim]
 
 
 def block_occupancy(mask: jax.Array, bk: int = 128, bn: int = 128) -> float:

@@ -1,128 +1,103 @@
-"""Personalized sparse serving demo: batched generation from per-client
-masked models (the serving counterpart of DisPFL — each request is routed to
-its owner's personalized sparse model).
+"""Thin CLI over the repro.serve serving plane.
 
-Metrics stream live as JSON lines (one object per ``--metrics-every`` decode
-steps, plus a final summary line) through ``repro.sim.report.MetricsStream``
-— the same streaming protocol the round engine and network simulator use —
-instead of a single end-of-run dump.
+Builds a ``ModelStore`` (synthetic per-user sparse personalizations, or a
+trained engine checkpoint via ``--from-checkpoint``), replays a
+seed-derived request stream through the micro-batcher, and streams p50/p99
+latency, requests/s and cache counters as JSON lines.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
-        --clients 4 --batch 2 --prompt-len 16 --gen 16 \
-        --metrics-jsonl serve_metrics.jsonl
+    PYTHONPATH=src python -m repro.launch.serve \
+        --users 64 --cache-size 16 --max-batch 8 --requests 256 \
+        --backend ref --metrics-jsonl serve_metrics.jsonl
+
+``--model`` picks the served family: ``mlp`` (matmul pipeline — supports
+vmap/ref/pallas backends), ``smallcnn`` (FL task model, vmap only), or
+any registered smoke arch name (one-step scorer, vmap only).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import numpy as np
+
+def build_model(name: str, rows: int):
+    from repro.serve.model import ArchModel, MLPModel, TaskModel
+
+    if name == "mlp":
+        return MLPModel(d_in=64, widths=(128, 128), n_out=32, rows=rows)
+    if name == "smallcnn":
+        from repro.fl.base import make_cnn_task
+        return TaskModel(make_cnn_task("smallcnn"), hw=16, rows=rows)
+    from repro.configs import SMOKE_ARCHS
+    if name in SMOKE_ARCHS:
+        return ArchModel(SMOKE_ARCHS[name], rows=rows)
+    raise SystemExit(
+        f"unknown --model {name!r}: expected mlp, smallcnn, or one of "
+        f"{sorted(SMOKE_ARCHS)}")
+
+
+def build_store(args, model):
+    import jax
+    import numpy as np
+
+    from repro.core.masks import apply_mask, init_mask
+    from repro.serve.store import ModelStore
+
+    if args.from_checkpoint:
+        return ModelStore.from_checkpoint(
+            args.from_checkpoint, cache_size=args.cache_size)
+    base = model.init(jax.random.PRNGKey(args.seed))
+    store = ModelStore(base, cache_size=args.cache_size)
+    keys = jax.random.split(jax.random.PRNGKey(args.seed + 1), 2 * args.users)
+    for u in range(args.users):
+        p = model.init(keys[2 * u])
+        m = init_mask(keys[2 * u + 1], p, args.density)
+        store.put(u, apply_mask(p, m), m)
+    return store
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16, dest="prompt_len")
-    ap.add_argument("--gen", type=int, default=16)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--users", type=int, default=64)
+    ap.add_argument("--cache-size", type=int, default=16, dest="cache_size")
+    ap.add_argument("--max-batch", type=int, default=8, dest="max_batch")
+    ap.add_argument("--max-wait", type=float, default=0.005, dest="max_wait",
+                    help="virtual seconds a request may wait before flush")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--backend", default="vmap",
+                    choices=("vmap", "ref", "pallas"))
+    ap.add_argument("--model", default="mlp",
+                    help="mlp | smallcnn | <smoke arch name>")
+    ap.add_argument("--rows", type=int, default=4,
+                    help="input rows per request (matmul M)")
     ap.add_argument("--density", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--metrics-every", type=int, default=4,
-                    dest="metrics_every",
-                    help="emit a live metrics line every N decode steps")
+    ap.add_argument("--rate", type=float, default=1000.0,
+                    help="virtual arrivals per second")
+    ap.add_argument("--from-checkpoint", default=None, dest="from_checkpoint",
+                    help="load users from a trained engine archive instead "
+                         "of synthesizing them")
+    ap.add_argument("--metrics-every", type=int, default=8,
+                    dest="metrics_every")
     ap.add_argument("--metrics-jsonl", default="-", dest="metrics_jsonl",
                     help="stream JSON lines here ('-': stdout)")
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
-
-    from repro.configs import SMOKE_ARCHS
-    from repro.core.masks import apply_mask, init_mask
-    from repro.models import bind
-    from repro.utils.tree import tree_stack
-
-    cfg = SMOKE_ARCHS[args.arch]
-    api = bind(cfg, remat=False)
-    k = args.clients
-    keys = jax.random.split(jax.random.PRNGKey(args.seed), 2 * k)
-    params, masks = [], []
-    for i in range(k):
-        p = api.init(keys[i])
-        m = init_mask(keys[k + i], p, args.density)
-        params.append(apply_mask(p, m))
-        masks.append(m)
-    sp = tree_stack(params)
-
-    b, s0 = args.batch, args.prompt_len
-    max_len = s0 + args.gen
-    prompts = jax.random.randint(jax.random.PRNGKey(7), (k, b, s0), 0, cfg.vocab)
-
-    extra = {}
-    if cfg.prefix_len:
-        extra["prefix"] = jnp.zeros((k, b, cfg.prefix_len, cfg.d_model))
-    if cfg.enc_layers:
-        extra["frames"] = jax.random.normal(
-            jax.random.PRNGKey(9), (k, b, 8, cfg.d_model))
-
-    def make_cache():
-        if cfg.enc_layers:
-            return jax.vmap(lambda _: api.init_cache(b, max_len, enc_len=8))(
-                jnp.arange(k))
-        return jax.vmap(lambda _: api.init_cache(b, max_len))(jnp.arange(k))
-
-    cache = make_cache()
-
-    @jax.jit
-    def prefill(sp, prompts, cache, extra):
-        batch = {"tokens": prompts, **extra}
-        return jax.vmap(api.prefill)(sp, batch, cache)
-
-    @jax.jit
-    def decode(sp, toks, pos, cache):
-        logits, cache = jax.vmap(api.decode)(sp, toks, pos, cache)
-        nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
-        return nxt, cache
-
+    from repro.serve.batcher import RequestStream
+    from repro.serve.engine import ServeEngine
     from repro.sim.report import MetricsStream
 
+    model = build_model(args.model, args.rows)
+    store = build_store(args, model)
+    n_users = len(store.users()) or args.users
+
     stream = MetricsStream(args.metrics_jsonl)
-    t0 = time.time()
-    logits, cache = prefill(sp, prompts, cache, extra)
-    nxt = jnp.argmax(logits[:, :, -1, :], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-    stream.emit({"event": "prefill", "arch": cfg.name, "clients": k,
-                 "batch_per_client": b, "prompt_len": s0,
-                 "prefill_s": round(t_prefill, 3)})
-
-    out_tokens = [nxt]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        pos = jnp.full((k,), s0 + i, jnp.int32)
-        nxt, cache = decode(sp, nxt[:, :, None], pos, cache)
-        out_tokens.append(nxt)
-        step = i + 1
-        if step % args.metrics_every == 0 or step == args.gen - 1:
-            elapsed = time.time() - t0
-            stream.emit({
-                "event": "decode", "step": step,
-                "tokens_out": k * b * step,
-                "elapsed_s": round(elapsed, 3),
-                "tok_per_s": round(k * b * step / max(elapsed, 1e-9), 1)})
-    t_decode = time.time() - t0
-
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=-1)  # (K, B, gen)
-    stream.emit({
-        "event": "summary",
-        "arch": cfg.name,
-        "clients": k,
-        "batch_per_client": b,
-        "prefill_s": round(t_prefill, 2),
-        "decode_s": round(t_decode, 2),
-        "tok_per_s": round(k * b * (args.gen - 1) / max(t_decode, 1e-9), 1),
-        "sample_generation_client0": gen[0, 0].tolist(),
-    })
+    stream.emit({"event": "store", **store.stats(),
+                 "model": args.model, "backend": args.backend})
+    engine = ServeEngine(store, model, backend=args.backend,
+                         max_batch=args.max_batch, max_wait=args.max_wait,
+                         metrics=stream, metrics_every=args.metrics_every)
+    requests = RequestStream(n_users=n_users, n_requests=args.requests,
+                             seed=args.seed, rate=args.rate)
+    engine.serve(requests)
     stream.close()
 
 

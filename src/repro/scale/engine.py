@@ -40,7 +40,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.base import FLResult, Task, _pad_order, evaluate_clients, rounds_to_targets
+from repro.fl.base import (
+    FLResult,
+    Task,
+    _pad_order,
+    evaluate_clients_stacked,
+    rounds_to_targets,
+    stack_eval_arrays,
+)
 from repro.fl.engine import Callback, RoundCtx, RoundEngine, RoundMetrics, StrategyBase
 from repro.core.accounting import CommReport, FlopsReport
 from repro.models.common import softmax_xent
@@ -90,6 +97,7 @@ class ScaleEngine(RoundEngine):
         self._opt = SGDConfig(momentum=cfg.momentum,
                               weight_decay=cfg.weight_decay)
         self._round_step = None
+        self._eval_arrays = None
 
     # ------------------------------------------------------------------
     # construction-time checks
@@ -237,8 +245,7 @@ class ScaleEngine(RoundEngine):
 
         acc_mean = acc_std = None
         if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            accs = evaluate_clients(
-                self.task, self.adapter.eval_params(self.state), self.clients)
+            accs = self._stacked_eval()
             acc_mean = float(np.mean(accs))
             acc_std = float(np.std(accs))
             self._acc_history.append(acc_mean)
@@ -255,12 +262,21 @@ class ScaleEngine(RoundEngine):
             wall_s=time.perf_counter() - t0)
         return self._finish_metrics(ctx, metrics)
 
+    def _stacked_eval(self) -> list[float]:
+        """Personalized eval without leaving the device: one vmapped
+        launch over the client-stacked params (golden-equal to the
+        per-client ``evaluate_clients`` loop)."""
+        if self._eval_arrays is None:
+            self._eval_arrays = stack_eval_arrays(self.clients)
+        return evaluate_clients_stacked(
+            self.task, self.adapter.stacked_eval_params(self.state),
+            self.clients, arrays=self._eval_arrays)
+
     # ------------------------------------------------------------------
     # results / messages / checkpoints
     # ------------------------------------------------------------------
     def result(self, targets: Sequence[float] = (0.5,)) -> FLResult:
-        final = evaluate_clients(
-            self.task, self.adapter.eval_params(self.state), self.clients)
+        final = self._stacked_eval()
         comm = CommReport(**{k: float(np.mean(v)) if v else 0.0
                              for k, v in self._comm.items()})
         flops = FlopsReport(**{k: float(np.mean(v)) if v else 0.0

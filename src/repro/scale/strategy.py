@@ -138,6 +138,11 @@ class StackedStrategyBase:
     def eval_params(self, state: dict) -> list[PyTree]:
         return tree_unstack(state["params"], len(self.base.clients))
 
+    def stacked_eval_params(self, state: dict) -> PyTree:
+        """Client-stacked personalized params for the vmapped eval path —
+        same models as ``eval_params``, without the host-side unstack."""
+        return state["params"]
+
     def round_comm(self, state: dict, ctx: RoundCtx):
         raise NotImplementedError
 

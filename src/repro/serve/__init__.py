@@ -1,0 +1,59 @@
+"""repro.serve — multi-tenant personalized sparse serving plane.
+
+DisPFL trains one personalized sparse model per client; this package is
+where those models get *served*.  Three pieces, three contracts:
+
+**Store** (``store.ModelStore``).  Each user's personalized model lives
+at rest as a codec-encoded ``PackedSparse`` frame against a shared dense
+base — the ``sparse/codec.py`` wire frame IS the at-rest format, so
+``store.bytes_at_rest(user) == codec.encoded_nbytes(packed delta)`` byte
+for byte, and storage scales with mask density instead of K dense
+replicas.  Frame values are the user's trained weights at the mask
+support (a replacement delta, not a fp32-lossy residual), so
+``store.get(user)`` returns the training-side ``w ⊙ m`` bit-exactly.  The
+capacity-bounded LRU cache is a device-resident *slot pool*: stacked
+``(cache_size, ...)`` leaves holding the unpacked models of the most
+recently served users, with hit/miss/eviction counters.  A miss is one
+fused host decode (``sparse.codec.decode_dense``) plus one in-place slot
+write; a hit moves zero parameter bytes.  ``resident(user)`` is a
+side-effect-free probe for the batcher.
+
+**Batcher** (``batcher.RequestStream``, ``batcher.MicroBatcher``).
+Arrivals are fully seed-derived (Zipf-tilted users, exponential gaps on a
+virtual clock), so the batch schedule — and therefore the cache's
+hit/miss/eviction sequence — is a pure function of (seed, knobs).
+Flushes happen when ``max_batch`` requests are pending or the oldest has
+waited ``max_wait`` virtual seconds; a flush takes at most one request
+per user (a pool slot serves one model per launch), and requests whose
+models are already resident in the slot pool launch first.
+
+**Engine** (``engine.ServeEngine``).  One device launch per batch:
+request inputs scatter into their models' pool slots and the whole pool
+is scored by a backend — ``pallas`` (user-major
+``kernels.masked_matmul.batched_masked_matmul`` grid with
+scalar-prefetched per-user block masks), ``ref`` (its jnp oracle), or
+``vmap`` (any model; bit-exact fp32 vs the per-user loop).  The launch
+operand is the pool itself, so shapes are constant, jit compiles once,
+and no per-launch parameter restacking happens; p50/p99 latency and
+requests/s stream as JSON lines via ``sim.report.MetricsStream``.
+
+CLI: ``python -m repro.launch.serve --users 64 --cache-size 16
+--max-batch 8 --requests 256 --backend ref``.
+"""
+from repro.serve.batcher import Batch, MicroBatcher, Request, RequestStream
+from repro.serve.engine import ServeEngine, ServeResult
+from repro.serve.model import ArchModel, MLPModel, TaskModel
+from repro.serve.store import ModelStore
+
+__all__ = [
+    "ArchModel",
+    "Batch",
+    "MLPModel",
+    "MicroBatcher",
+    "ModelStore",
+    "Request",
+    "RequestStream",
+    "ServeEngine",
+    "ServeResult",
+    "TaskModel",
+]

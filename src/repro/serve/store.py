@@ -1,0 +1,240 @@
+"""``ModelStore`` — millions of personalized models at wire density.
+
+DisPFL's end product is one personalized sparse model per user: a mask plus
+the weights it keeps.  The store holds each user's model *exactly as it
+travels on the wire*: a codec-encoded ``PackedSparse`` frame
+(``sparse/codec.py`` — 8-byte header + bitmap + nnz values) against a
+shared dense base model.  The frame IS the at-rest format, so
+
+    store.bytes_at_rest(user) == codec.encoded_nbytes(user's packed delta)
+
+byte for byte, and storage scales with mask density, not with K dense
+replicas (``tests/test_serve.py`` pins this down; ``benchmarks/
+serve_bench.py`` tracks the bytes-vs-density curve).
+
+Delta semantics, stated honestly: the frame's bitmap is the personalization
+*support* (the user's mask) and its values are the user's trained weights
+at that support — a sparse *replacement* delta over the base, not a
+residual ``w - base``.  At fp32 a residual delta saves zero bytes (same
+nnz, same itemsize) and breaks the store's bit-exactness contract
+(``(w - b) + b != w`` in floating point); replacement reconstruction
+``scatter(values at bitmap)`` returns the training-side ``w ⊙ m``
+bit-exactly.  The dense base serves two roles: the cold-start model for
+users with no stored delta, and the dense baseline serving cost that the
+benchmarks compare against.
+
+The LRU cache is a *slot pool*: one device-resident stacked buffer per
+leaf, shape ``(cache_size, ...)``, holding the unpacked dense-masked
+models of the ``cache_size`` most recently served users.  The pool IS the
+batched launch operand — the engine's vmapped/kernel forward runs straight
+over it, so serving a cache hit moves zero parameter bytes (no per-launch
+gather, no host restacking; that restacking cost is exactly what made
+naive stacked serving lose to a per-user loop).  A miss decodes the
+user's frame and writes one slot in place (``.at[slot].set`` under a
+buffer-donating jit).  ``hits`` / ``misses`` / ``evictions`` counters
+stream into the serve metrics; the access pattern is deterministic given
+the request stream, so cache behaviour is reproducible (tested).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import (
+    TreeSpec,
+    decode_dense,
+    encode,
+    encoded_nbytes,
+    pack_tree,
+    tree_packed_nnz,
+)
+from repro.utils.tree import tree_index, tree_ones_like
+
+PyTree = Any
+
+
+class ModelStore:
+    """Per-user packed personalized models + slot-pool LRU cache.
+
+    ``base_params`` is the shared dense base: served (with an all-ones
+    mask) to users without a stored delta, and the template the message
+    schema (``TreeSpec``) is derived from — every user's delta must share
+    its tree structure and leaf shapes.
+    """
+
+    def __init__(self, base_params: PyTree, cache_size: int = 32,
+                 payload_dtype=np.float32):
+        if cache_size < 1:
+            raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        self.base = base_params
+        self.cache_size = int(cache_size)
+        self.payload_dtype = np.dtype(payload_dtype)
+        self.spec = TreeSpec.from_tree(base_params, dtype=self.payload_dtype)
+        self._frames: dict[int, bytes] = {}
+        self._nnz: dict[int, int] = {}
+        # slot pool: stacked device buffers; _slot_of is the LRU map
+        c = self.cache_size
+        self._pool = {
+            "params": jax.tree.map(
+                lambda x: jnp.zeros((c,) + np.shape(x), np.asarray(x).dtype),
+                base_params),
+            "masks": jax.tree.map(
+                lambda x: jnp.zeros((c,) + np.shape(x), jnp.float32),
+                base_params),
+        }
+        self._slot_of: "OrderedDict[int, int]" = OrderedDict()
+        self._free = list(range(c - 1, -1, -1))     # pop() hands out 0,1,...
+        self._write = jax.jit(
+            lambda pool, slot, new: jax.tree.map(
+                lambda buf, x: buf.at[slot].set(x), pool, new),
+            donate_argnums=(0,))
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    # write path
+    # ------------------------------------------------------------------
+    def put(self, user: int, params: PyTree, mask: Optional[PyTree]) -> int:
+        """Encode ``params ⊙ mask`` as the user's at-rest frame; returns its
+        size in bytes.  ``mask=None`` stores a dense (all-ones) delta."""
+        packed = pack_tree(params, mask, dtype=self.payload_dtype)
+        frame = encode(packed)
+        assert len(frame) == encoded_nbytes(packed)
+        self._frames[user] = frame
+        self._nnz[user] = tree_packed_nnz(packed)
+        slot = self._slot_of.pop(user, None)        # stale unpacked copy
+        if slot is not None:
+            self._free.append(slot)
+        return len(frame)
+
+    # ------------------------------------------------------------------
+    # read path (through the slot-pool LRU cache)
+    # ------------------------------------------------------------------
+    def acquire(self, user: int) -> int:
+        """Slot index of the user's unpacked model, loading it into the
+        pool on a miss (evicting the least recently served user if full).
+        The returned slot stays valid until ``cache_size - 1`` further
+        distinct-user acquires."""
+        slot = self._slot_of.get(user)
+        if slot is not None:
+            self.hits += 1
+            self._slot_of.move_to_end(user)
+            return slot
+        self.misses += 1
+        frame = self._frames.get(user)
+        if frame is None:
+            entry = {"params": self.base,
+                     "masks": tree_ones_like(self.base)}
+        else:
+            # fused single-pass host decode: this is the serving hot path
+            params, masks = decode_dense(frame, self.spec)
+            entry = {"params": params, "masks": masks}
+        if self._free:
+            slot = self._free.pop()
+        else:
+            _, slot = self._slot_of.popitem(last=False)
+            self.evictions += 1
+        self._pool = self._write(self._pool, slot, entry)
+        self._slot_of[user] = slot
+        return slot
+
+    def get(self, user: int) -> tuple[PyTree, PyTree]:
+        """The user's unpacked (dense-masked params, mask) — bit-exact vs
+        the training-side ``w ⊙ m``.  Unknown users get the shared base
+        with an all-ones mask (cold start)."""
+        slot = self.acquire(user)
+        return (tree_index(self._pool["params"], slot),
+                tree_index(self._pool["masks"], slot))
+
+    @property
+    def pool_params(self) -> PyTree:
+        """(cache_size, ...) stacked params — the batched launch operand."""
+        return self._pool["params"]
+
+    @property
+    def pool_masks(self) -> PyTree:
+        """(cache_size, ...) stacked masks, aligned with ``pool_params``."""
+        return self._pool["masks"]
+
+    def resident(self, user: int) -> bool:
+        """True iff the user's unpacked model holds a pool slot right now
+        (no counter side effects — the batcher's grouping predicate)."""
+        return user in self._slot_of
+
+    def __contains__(self, user: int) -> bool:
+        return user in self._frames
+
+    def users(self) -> list[int]:
+        return sorted(self._frames)
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    def bytes_at_rest(self, user: int) -> int:
+        """Exact at-rest size of the user's frame — equals
+        ``codec.encoded_nbytes`` of their packed delta by construction."""
+        return len(self._frames[user])
+
+    def total_bytes_at_rest(self) -> int:
+        return sum(len(f) for f in self._frames.values())
+
+    def nnz(self, user: int) -> int:
+        return self._nnz[user]
+
+    def stats(self) -> dict:
+        return {
+            "users": len(self._frames),
+            "cache_size": self.cache_size,
+            "resident": len(self._slot_of),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "bytes_at_rest": self.total_bytes_at_rest(),
+        }
+
+    # ------------------------------------------------------------------
+    # construction from training artifacts
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, path: str, cache_size: int = 32,
+                        payload_dtype=np.float32,
+                        base_params: Optional[PyTree] = None) -> "ModelStore":
+        """Load a trained ``RoundEngine``/``ScaleEngine`` archive (written
+        by ``engine.save``) into a store: client k's personalized params
+        (⊙ mask, when the strategy keeps masks) become user k's delta.
+
+        ``base_params`` defaults to the dense mean of the client models —
+        the natural shared base the deltas personalize.
+        """
+        from repro.checkpoint import load_pytree
+        from repro.fl.engine import _unpack
+
+        payload = load_pytree(path, as_jnp=False)
+        if "state" not in payload or "params" not in payload["state"]:
+            raise ValueError(
+                f"{path} is not an engine archive (no state/params)")
+        state = _unpack(payload["state"])
+        params = state["params"]
+        masks = state.get("masks")
+        if base_params is None:
+            stacked = [np.stack([np.asarray(x) for x in leaves])
+                       for leaves in zip(*(jax.tree.leaves(p)
+                                           for p in params))]
+            treedef = jax.tree.structure(params[0])
+            base_params = jax.tree.unflatten(
+                treedef, [s.mean(axis=0) for s in stacked])
+        store = cls(base_params, cache_size=cache_size,
+                    payload_dtype=payload_dtype)
+        for k, p in enumerate(params):
+            # dispfl-style params are already w ⊙ m; pack gathers at the
+            # mask's support, so the stored values are the trained weights
+            store.put(k, p, masks[k] if masks is not None else None)
+        return store

@@ -37,6 +37,7 @@ bytes-vs-density.
 from repro.sparse.codec import (  # noqa: F401
     TreeSpec,
     decode,
+    decode_dense,
     encode,
     encoded_nbytes,
 )

@@ -123,8 +123,9 @@ def encode(packed: PyTree) -> bytes:
     return out
 
 
-def decode(data: bytes, spec: TreeSpec) -> PyTree:
-    """Rebuild the packed tree from one frame + its out-of-band schema."""
+def _frame_arrays(data: bytes, spec: TreeSpec):
+    """Parse one frame's header and pull out (flags, values, nnz) as host
+    arrays — the shared prelude of ``decode`` / ``decode_dense``."""
     magic, version, code, nnz = _HEADER.unpack_from(data, 0)
     if magic != MAGIC:
         raise ValueError(f"bad magic 0x{magic:04x}")
@@ -139,6 +140,12 @@ def decode(data: bytes, spec: TreeSpec) -> PyTree:
     values = np.frombuffer(data, dtype=np.dtype(dtype).newbyteorder("<"),
                            count=nnz, offset=off + nb_bitmap).astype(dtype)
     flags = _unpack_bits(words, n_coords)
+    return flags, values, nnz
+
+
+def decode(data: bytes, spec: TreeSpec) -> PyTree:
+    """Rebuild the packed tree from one frame + its out-of-band schema."""
+    flags, values, nnz = _frame_arrays(data, spec)
     leaves, pos, vpos = [], 0, 0
     for shape in spec.shapes:
         n = int(np.prod(shape))
@@ -153,3 +160,32 @@ def decode(data: bytes, spec: TreeSpec) -> PyTree:
     if vpos != nnz:
         raise ValueError(f"frame carries {nnz} values, schema holds {vpos}")
     return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def decode_dense(data: bytes, spec: TreeSpec,
+                 mask_dtype=np.float32) -> tuple[PyTree, PyTree]:
+    """Decode one frame straight to dense host leaves: ``(params, masks)``
+    numpy trees, bit-exact vs ``unpack_tree(decode(...))``.
+
+    This is the serving hot path (a cache miss stands between a request
+    and its launch): one bit-unpack pass over the whole frame, one scatter
+    per leaf, and no intermediate ``PackedSparse`` / device round-trips —
+    ``decode`` + ``unpack_tree`` + ``unpack_mask_tree`` does the bitmap
+    work three times and bounces every leaf through the device.
+    """
+    flags, values, nnz = _frame_arrays(data, spec)
+    params, masks, pos, vpos = [], [], 0, 0
+    for shape in spec.shapes:
+        n = int(np.prod(shape))
+        leaf_flags = flags[pos:pos + n]
+        k = int(leaf_flags.sum())
+        dense = np.zeros(n, dtype=values.dtype)
+        dense[leaf_flags] = values[vpos:vpos + k]
+        params.append(dense.reshape(shape))
+        masks.append(leaf_flags.reshape(shape).astype(mask_dtype))
+        pos += n
+        vpos += k
+    if vpos != nnz:
+        raise ValueError(f"frame carries {nnz} values, schema holds {vpos}")
+    return (jax.tree.unflatten(spec.treedef, params),
+            jax.tree.unflatten(spec.treedef, masks))

@@ -207,6 +207,32 @@ def test_scale_engine_rejects_unsupported_configs(setup):
         ScaleEngine(make_strategy("dispfl"), task, ragged, cfg)
 
 
+def test_stacked_eval_golden_equal_to_loop(setup):
+    """The vmapped personalized eval replacing the per-client host loop is
+    bit-equal to it — on round-0 state and on a trained trajectory, with
+    ragged per-client test sets."""
+    import dataclasses as dc
+
+    from repro.fl.base import evaluate_clients, evaluate_clients_stacked
+
+    task, clients, cfg = setup
+    # make the test sets ragged so the padding + live-mask path is exercised
+    ragged = [dc.replace(c, test_x=c.test_x[: len(c.test_y) - k],
+                         test_y=c.test_y[: len(c.test_y) - k])
+              for k, c in enumerate(clients)]
+    eng = ScaleEngine(make_strategy("dispfl"), task, ragged,
+                      dc.replace(cfg, rounds=2))
+    loop = evaluate_clients(task, eng.adapter.eval_params(eng.state), ragged)
+    stacked = evaluate_clients_stacked(
+        task, eng.adapter.stacked_eval_params(eng.state), ragged)
+    assert loop == stacked
+    for _ in eng.rounds():
+        pass
+    loop = evaluate_clients(task, eng.adapter.eval_params(eng.state), ragged)
+    assert eng._stacked_eval() == loop
+    assert eng.result().final_accs == loop
+
+
 # ---------------------------------------------------------------------------
 # Stacked primitive parity (unit level)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,357 @@
+"""repro.serve: store round-trip + at-rest accounting, LRU determinism,
+batcher reproducibility, batched-kernel parity, engine bit-exactness (every
+registered smoke arch) and end-to-end serving."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.core.masks import apply_mask, init_mask
+from repro.serve import (
+    MicroBatcher,
+    MLPModel,
+    ModelStore,
+    RequestStream,
+    ServeEngine,
+    TaskModel,
+)
+from repro.serve.model import ArchModel
+from repro.sparse import encoded_nbytes, pack_tree
+
+pytestmark = pytest.mark.tier1
+
+
+def _mlp_store(model, n_users=6, density=0.5, cache_size=4, seed=0):
+    base = model.init(jax.random.PRNGKey(seed))
+    store = ModelStore(base, cache_size=cache_size)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), 2 * n_users)
+    masked, masks = [], []
+    for u in range(n_users):
+        p = model.init(keys[2 * u])
+        m = init_mask(keys[2 * u + 1], p, density)
+        pm = apply_mask(p, m)
+        store.put(u, pm, m)
+        masked.append(pm)
+        masks.append(m)
+    return store, masked, masks
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_bit_exact():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    store, masked, masks = _mlp_store(model)
+    for u in range(len(masked)):
+        p, m = store.get(u)
+        assert _trees_equal(p, masked[u])
+        assert _trees_equal(m, masks[u])
+
+
+def test_store_bytes_at_rest_is_codec_frame():
+    """The acceptance invariant: bytes_at_rest == codec.encoded_nbytes of
+    the user's packed delta, byte for byte."""
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    store, masked, masks = _mlp_store(model, density=0.3)
+    for u in range(len(masked)):
+        packed = pack_tree(masked[u], masks[u], dtype=np.float32)
+        assert store.bytes_at_rest(u) == encoded_nbytes(packed)
+    assert store.total_bytes_at_rest() == sum(
+        store.bytes_at_rest(u) for u in store.users())
+
+
+def test_store_bytes_scale_with_density():
+    model = MLPModel(d_in=32, widths=(64,), n_out=16)
+    sizes = {}
+    for d in (0.1, 0.5, 1.0):
+        store, _, _ = _mlp_store(model, n_users=2, density=d)
+        sizes[d] = store.bytes_at_rest(0)
+    assert sizes[0.1] < sizes[0.5] < sizes[1.0]
+
+
+def test_store_unknown_user_cold_start():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    store, _, _ = _mlp_store(model, n_users=2)
+    p, m = store.get(999)
+    assert _trees_equal(p, store.base)
+    assert all(bool(jnp.all(x == 1)) for x in jax.tree.leaves(m))
+    assert 999 not in store
+
+
+def test_store_put_overwrites_and_invalidates_cache():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    store, masked, masks = _mlp_store(model, n_users=2)
+    store.get(0)
+    assert store.resident(0)
+    new_p = jax.tree.map(lambda x: x * 2.0, masked[1])
+    store.put(0, new_p, masks[1])
+    assert not store.resident(0)
+    p, _ = store.get(0)
+    assert _trees_equal(p, apply_mask(new_p, masks[1]))
+
+
+def test_decode_dense_matches_unpacked_decode():
+    """The store's fused miss path (frame -> dense host leaves in one
+    bit-unpack pass) is bit-exact vs decode + unpack_tree/unpack_mask_tree."""
+    from repro.sparse import decode, decode_dense, unpack_mask_tree, unpack_tree
+
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    store, _, _ = _mlp_store(model, n_users=2, density=0.3)
+    frame = store._frames[0]
+    packed = decode(frame, store.spec)
+    p_new, m_new = decode_dense(frame, store.spec)
+    assert _trees_equal(p_new, unpack_tree(packed))
+    assert _trees_equal(m_new, unpack_mask_tree(packed))
+
+
+def test_lru_eviction_deterministic():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+
+    def run():
+        store, _, _ = _mlp_store(model, n_users=5, cache_size=2)
+        for u in [0, 1, 0, 2, 1, 0, 3, 4]:
+            store.get(u)
+        return store.stats()
+
+    a, b = run(), run()
+    assert a == b
+    # by hand: 0m 1m 0h(0 MRU) 2m(evict 1) 1m(evict 0) 0m(evict 2)
+    # 3m(evict 1) 4m(evict 0) -> 1 hit, 7 misses, 5 evictions
+    assert (a["hits"], a["misses"], a["evictions"]) == (1, 7, 5)
+    assert a["resident"] == 2
+
+
+# ---------------------------------------------------------------------------
+# store <- real trained checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_store_from_trained_checkpoint(tmp_path):
+    from repro.data import build_federated_image_task
+    from repro.fl import FLConfig, RoundEngine, make_cnn_task, make_strategy
+
+    clients, _ = build_federated_image_task(
+        0, n_clients=4, partition="pathological", classes_per_client=2,
+        n_train_per_class=24, n_test_per_client=16, hw=8, noise=0.7)
+    task = make_cnn_task("smallcnn", 10, 8, width=4)
+    cfg = FLConfig(n_clients=4, rounds=2, local_epochs=1, batch_size=16,
+                   degree=2, eval_every=2)
+    eng = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="loop")
+    eng.run()
+    path = str(tmp_path / "dispfl.npz")
+    eng.save(path)
+
+    store = ModelStore.from_checkpoint(path, cache_size=4)
+    assert store.users() == [0, 1, 2, 3]
+    for k in range(4):
+        p, m = store.get(k)
+        want = apply_mask(eng.state["params"][k], eng.state["masks"][k])
+        assert _trees_equal(p, want), f"client {k} params not bit-exact"
+        assert _trees_equal(m, eng.state["masks"][k])
+    # the checkpointed models really serve: engine forward == task forward
+    tm = TaskModel(task, hw=8)
+    engine = ServeEngine(store, tm, backend="vmap", max_batch=2)
+    reqs = RequestStream(n_users=4, n_requests=8, seed=5).requests()
+    res = engine.serve(reqs)
+    for r in reqs:
+        p, _ = store.get(r.user)
+        want = np.asarray(tm.forward(p, tm.make_input(r.input_seed)))
+        assert np.array_equal(want, res.outputs[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+
+def test_request_stream_reproducible():
+    a = RequestStream(n_users=8, n_requests=50, seed=7).requests()
+    b = RequestStream(n_users=8, n_requests=50, seed=7).requests()
+    assert a == b
+    c = RequestStream(n_users=8, n_requests=50, seed=8).requests()
+    assert a != c
+    assert all(0 <= r.user < 8 for r in a)
+    assert all(a[i].t_arrival < a[i + 1].t_arrival for i in range(len(a) - 1))
+
+
+@pytest.mark.parametrize("max_batch,max_wait", [(4, 0.002), (8, 0.0), (1, 0.01)])
+def test_batcher_respects_knobs(max_batch, max_wait):
+    reqs = RequestStream(n_users=8, n_requests=60, seed=3).requests()
+    batches = list(MicroBatcher(reqs, max_batch=max_batch,
+                                max_wait=max_wait).batches())
+    served = [r.rid for b in batches for r in b.requests]
+    assert sorted(served) == list(range(60))          # every request, once
+    eps = 1e-12
+    for b in batches:
+        assert 1 <= len(b.requests) <= max_batch
+        assert all(w <= max_wait + eps for w in b.queue_waits())
+        assert all(w >= -eps for w in b.queue_waits())
+
+
+def test_batcher_deterministic_and_resident_first():
+    reqs = RequestStream(n_users=6, n_requests=40, seed=1).requests()
+    resident = lambda u: u % 2 == 0
+
+    def run():
+        return [(b.t_flush, b.users) for b in
+                MicroBatcher(reqs, max_batch=4, max_wait=0.003,
+                             resident=resident).batches()]
+
+    a, b = run(), run()
+    assert a == b
+    for _, users in a:
+        # resident users form a prefix of every batch
+        flags = [resident(u) for u in users]
+        assert flags == sorted(flags, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# batched kernel parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("density", [0.05, 0.5, 1.0])
+def test_batched_kernel_matches_oracle_and_dense(density):
+    from repro.kernels.ops import batched_masked_matmul
+    from repro.kernels.ref import batched_masked_matmul_ref
+
+    rng = np.random.default_rng(int(density * 100))
+    u, m, k, n = 4, 5, 70, 33                    # odd shapes force padding
+    x = jnp.asarray(rng.standard_normal((u, m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((u, k, n)).astype(np.float32))
+    mask = jnp.asarray((rng.random((u, k, n)) < density).astype(np.float32))
+
+    got = batched_masked_matmul(x, w, mask, bm=8, bn=16, bk=32)
+    want = batched_masked_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    # ... and against the per-user dense-masked loop
+    for i in range(u):
+        dense = np.asarray(x[i]) @ (np.asarray(w[i]) * np.asarray(mask[i]))
+        np.testing.assert_allclose(np.asarray(got[i]), dense,
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_vmap_bit_exact_vs_per_user_loop():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8, rows=2)
+    store, _, _ = _mlp_store(model, n_users=6, cache_size=3)
+    reqs = RequestStream(n_users=6, n_requests=24, seed=2).requests()
+    res = ServeEngine(store, model, backend="vmap", max_batch=4).serve(reqs)
+    assert sorted(res.outputs) == [r.rid for r in sorted(reqs, key=lambda r: r.rid)]
+    for r in reqs:
+        p, _ = store.get(r.user)
+        want = np.asarray(model.forward(p, model.make_input(r.input_seed)))
+        assert np.array_equal(want, res.outputs[r.rid]), r.rid
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_engine_sparse_backends_match_vmap(backend):
+    model = MLPModel(d_in=16, widths=(32,), n_out=8, rows=2)
+    store, _, _ = _mlp_store(model, n_users=6, cache_size=3)
+    reqs = RequestStream(n_users=6, n_requests=16, seed=4).requests()
+    base = ServeEngine(store, model, backend="vmap", max_batch=4).serve(reqs)
+    got = ServeEngine(store, model, backend=backend, max_batch=4).serve(reqs)
+    for rid in base.outputs:
+        np.testing.assert_allclose(got.outputs[rid], base.outputs[rid],
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", sorted(SMOKE_ARCHS))
+def test_engine_bit_exact_every_smoke_arch(arch):
+    """The acceptance criterion: multi-tenant batching never perturbs a
+    user's output.  Every request served in a mixed-user batch is bit-exact
+    (fp32) vs the per-user reference — the same request served alone
+    through a launch of the same width (the launch width is part of the
+    compiled program, so it is held fixed; XLA lowers some archs'
+    reductions differently at different widths)."""
+    model = ArchModel(SMOKE_ARCHS[arch], prompt_len=4, rows=1)
+    base = model.init(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    deltas = []
+    for u in range(2):
+        p = model.init(keys[2 * u])
+        m = init_mask(keys[2 * u + 1], p, 0.5)
+        deltas.append((apply_mask(p, m), m))
+
+    def build_store():
+        store = ModelStore(base, cache_size=2)
+        for u, (p, m) in enumerate(deltas):
+            store.put(u, p, m)
+        return store
+
+    reqs = RequestStream(n_users=2, n_requests=4, seed=6).requests()
+    batched = ServeEngine(build_store(), model, backend="vmap",
+                          max_batch=2).serve(reqs)
+    alone = ServeEngine(build_store(), model, backend="vmap", max_batch=2)
+    for r in reqs:
+        want = alone.serve([r], warmup=False).outputs[r.rid]
+        assert np.array_equal(want, batched.outputs[r.rid]), (arch, r.rid)
+        # and the values are the per-user dense-masked forward (tolerance:
+        # vmap fuses fp32 reductions differently than the unbatched apply)
+        p, _ = build_store().get(r.user)
+        ref = np.asarray(jax.jit(model.forward)(
+            p, jnp.asarray(model.make_input(r.input_seed))))
+        np.testing.assert_allclose(batched.outputs[r.rid], ref,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_engine_serve_reproducible_counters():
+    model = MLPModel(d_in=16, widths=(32,), n_out=8, rows=2)
+
+    def run():
+        store, _, _ = _mlp_store(model, n_users=8, cache_size=3)
+        reqs = RequestStream(n_users=8, n_requests=40, seed=9)
+        res = ServeEngine(store, model, backend="vmap", max_batch=4).serve(reqs)
+        s = res.summary
+        return (s["requests"], s["batches"], s["cache_hit_rate"],
+                s["store_hits"], s["store_misses"], s["store_evictions"])
+
+    assert run() == run()
+
+
+def test_engine_metrics_stream(tmp_path):
+    from repro.sim.report import MetricsStream
+
+    model = MLPModel(d_in=16, widths=(32,), n_out=8, rows=2)
+    store, _, _ = _mlp_store(model, n_users=4, cache_size=2)
+    path = str(tmp_path / "serve.jsonl")
+    stream = MetricsStream(path)
+    eng = ServeEngine(store, model, backend="vmap", max_batch=2,
+                      metrics=stream, metrics_every=2)
+    eng.serve(RequestStream(n_users=4, n_requests=16, seed=0))
+    stream.close()
+    lines = [json.loads(l) for l in open(path)]
+    assert lines, "no metrics emitted"
+    summary = lines[-1]
+    assert summary["event"] == "summary"
+    for key in ("p50_ms", "p99_ms", "requests_per_s", "cache_hit_rate",
+                "store_bytes_at_rest"):
+        assert key in summary
+    assert summary["requests"] == 16
+    assert any(l["event"] == "serve" for l in lines[:-1])
+
+
+def test_engine_rejects_unsupported_backend():
+    from repro.fl.base import make_cnn_task
+
+    model = TaskModel(make_cnn_task("smallcnn", 10, 8, width=4), hw=8)
+    store = ModelStore(model.init(jax.random.PRNGKey(0)), cache_size=2)
+    with pytest.raises(ValueError, match="backend"):
+        ServeEngine(store, model, backend="pallas")
