@@ -42,6 +42,7 @@ MODULES = ["sparse_codec", "engine_vmap", "scale_engine", "sim_faults",
 #   close      |new - base| <= atol + rtol * |base|
 #   timing     new <= max_ratio * base (+1us grace) — machine-dependent
 #   floor      new >= max(abs_floor, frac * base)
+#   ceiling    new <= abs_ceiling (baseline-independent hard cap)
 #   exact      new == base
 _RULES: dict[str, dict] = {
     # codec: exact functions of (seed, density) — tight
@@ -105,6 +106,12 @@ _RULES: dict[str, dict] = {
     "loop_s_per_round": {"kind": "timing", "max_ratio": 8.0},
     "vmap_s_per_round": {"kind": "timing", "max_ratio": 8.0},
     "scale_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+    "traced_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+    "untraced_s_per_round": {"kind": "timing", "max_ratio": 8.0},
+    # observability: enabling ring tracing must stay cheap relative to the
+    # same run untraced — an absolute cap, not baseline-relative, because
+    # the ratio is already machine-normalized
+    "trace_overhead_ratio": {"kind": "ceiling", "abs_ceiling": 1.25},
 }
 
 
@@ -117,6 +124,11 @@ def _check(metric: str, new, base) -> str | None:
     if kind == "exact":
         if new != base:
             return f"{metric}: {new!r} != baseline {base!r}"
+        return None
+    if kind == "ceiling":               # baseline-independent: cap only
+        if float(new) > rule["abs_ceiling"]:
+            return (f"{metric}: {float(new):g} above ceiling "
+                    f"{rule['abs_ceiling']:g}")
         return None
     new, base = float(new), float(base)
     if kind == "close":
@@ -180,8 +192,15 @@ def main() -> None:
                     help="comma-separated module subset")
     ap.add_argument("--out", default="BENCH_latest.json",
                     help="write all fresh rows here (CI artifact)")
+    ap.add_argument("--trace", default="BENCH_trace.json",
+                    help="export a Perfetto trace of the gated run here "
+                         "('': disable)")
     args = ap.parse_args()
     only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().enable(mode="ring", capacity=1 << 18)
 
     results = run_modules(only)
     with open(args.out, "w") as f:
@@ -189,6 +208,11 @@ def main() -> None:
                   f, indent=1, default=str)
     print(f"# wrote {sum(len(r) for r in results.values())} rows "
           f"to {args.out}")
+    if args.trace:
+        from repro.obs import write_trace
+        doc = write_trace(args.trace)
+        print(f"# wrote trace ({doc['otherData']['spans']} spans) "
+              f"to {args.trace}")
 
     if args.update:
         os.makedirs(BASELINE_DIR, exist_ok=True)

@@ -4,8 +4,17 @@ Python/dispatch overhead per round, which dominates simulation wall-clock
 for small models at K >= 16.
 
 Rows report seconds per round and the loop/vmap speedup at each K.
+
+The ``trace_overhead`` row is the instrumentation-cost contract of
+``repro.obs``: the same vmap engine run with tracing disabled vs enabled
+(ring mode), alternating per round so drift hits both sides equally.
+``check_regression`` gates the ratio against an absolute ceiling.  The
+probe swaps in a private ``Tracer`` so it never clobbers a run-level
+``--trace`` capture.
 """
 from __future__ import annotations
+
+import statistics
 
 from benchmarks.common import timer
 
@@ -31,6 +40,51 @@ def _setup(k: int, fast: bool):
                    local_epochs=2 if fast else 5, batch_size=32,
                    degree=min(10, k - 1), eval_every=10**6)
     return task, clients, cfg
+
+
+def _trace_overhead_row(fast: bool) -> dict:
+    from repro.fl import RoundEngine, make_strategy
+    from repro.obs import Tracer, set_tracer
+
+    import dataclasses
+
+    task, clients, cfg = _setup(8, True)
+    cfg = dataclasses.replace(cfg, rounds=9 if fast else 17)
+    eng = RoundEngine(make_strategy("dispfl"), task, clients, cfg,
+                      local_exec="vmap")
+    probe = Tracer()
+    old = set_tracer(probe)
+    try:
+        it = eng.rounds()
+        next(it)                          # warm-up round (jit compiles)
+        off, on = [], []
+        n_spans = 0
+        for m in it:
+            # m.wall_s was measured under the tracer state armed *before*
+            # the round ran; flip the state for the next round
+            if probe.enabled:
+                on.append(m.wall_s)
+                n_spans += len(probe)
+                probe.disable()
+            else:
+                off.append(m.wall_s)
+                probe.enable(mode="ring")   # resets the buffer
+    finally:
+        probe.disable()
+        set_tracer(old)
+    untraced = statistics.median(off)
+    traced = statistics.median(on)
+    return {
+        "name": "engine_vmap/trace_overhead",
+        # added us per round; clamped — machine jitter can make the traced
+        # median land under the untraced one, and the timing rule assumes
+        # a nonnegative baseline
+        "us_per_call": round(max(traced - untraced, 0.0) * 1e6, 1),
+        "untraced_s_per_round": round(untraced, 4),
+        "traced_s_per_round": round(traced, 4),
+        "trace_overhead_ratio": round(traced / untraced, 4),
+        "spans_per_round": round(n_spans / max(len(on), 1), 1),
+    }
 
 
 def run(fast: bool) -> list[dict]:
@@ -59,6 +113,7 @@ def run(fast: bool) -> list[dict]:
             "acc_loop": round(accs["loop"], 4),
             "acc_vmap": round(accs["vmap"], 4),
         })
+    rows.append(_trace_overhead_row(fast))
     return rows
 
 

@@ -4,6 +4,14 @@ and reports the three roofline terms + bottleneck per (arch x shape x mesh).
 Run ``PYTHONPATH=src python -m repro.launch.dryrun --both-meshes`` first to
 (re)generate artifacts; this benchmark only aggregates (compiling 60+
 combinations inside benchmarks.run would take an hour on CPU).
+
+A second section pairs the analytic model with *measured* span timings from
+``repro.obs``: a tiny instrumented DisPFL round run feeds
+``launch.roofline.measured_phase_rows`` so the report shows predicted ms
+(analytic FLOPs / bytes priced on the reference chip) next to observed ms
+per engine phase.  These rows are informational — host wall-clock on a CPU
+dev box is nowhere near the reference roof, and ``check_regression`` does
+not gate them.
 """
 from __future__ import annotations
 
@@ -14,13 +22,48 @@ import os
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
 
+def _measured_rows(fast: bool) -> list[dict]:
+    """Predicted-vs-observed phase rows from one instrumented engine run."""
+    from benchmarks.engine_vmap import _setup
+    from repro.fl import RoundEngine, make_strategy
+    from repro.launch.roofline import measured_phase_rows
+    from repro.obs import get_tracer, phase_summary
+
+    task, clients, cfg = _setup(8, True)
+    eng = RoundEngine(make_strategy("dispfl"), task, clients, cfg)
+    tr = get_tracer()
+    owned = not tr.enabled      # reuse a run-level --trace capture if armed
+    if owned:
+        tr.enable(mode="full")
+    mark = max((s.seq for s in tr.spans()), default=-1)
+    try:
+        res = eng.run()
+        engine_spans = [s for s in tr.spans(track="engine") if s.seq > mark]
+        summary = phase_summary(engine_spans)
+    finally:
+        if owned:
+            tr.disable()
+            tr.clear()
+    # analytic cost of ONE call of each phase: local = per-client round
+    # FLOPs x K (every client trains each round), mix = the round's total
+    # on-wire bytes (decimal MB, matching the paper's comm tables)
+    analytic = {
+        "round.local": (res.flops_per_round * cfg.n_clients, "flops"),
+        "round.mix": (res.comm_rows["total_MB"] * 1e6, "bytes"),
+    }
+    rows = []
+    for r in measured_phase_rows(summary, analytic):
+        rows.append({"name": f"roofline/measured_{r.pop('phase')}", **r})
+    return rows
+
+
 def run(fast: bool = True) -> list[dict]:
-    del fast
     rows = []
     files = sorted(glob.glob(os.path.join(ART_DIR, "*.json")))
     if not files:
-        return [{"name": "roofline/missing",
-                 "note": "run `python -m repro.launch.dryrun --both-meshes` first"}]
+        return _measured_rows(fast) + [
+            {"name": "roofline/missing",
+             "note": "run `python -m repro.launch.dryrun --both-meshes` first"}]
     n_ok = n_skip = n_fail = 0
     for path in files:
         with open(path) as f:
@@ -50,4 +93,5 @@ def run(fast: bool = True) -> list[dict]:
         })
     rows.append({"name": "roofline/summary", "ok": n_ok, "skipped": n_skip,
                  "failed": n_fail})
+    rows.extend(_measured_rows(fast))
     return rows

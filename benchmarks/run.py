@@ -40,8 +40,15 @@ def main() -> None:
                     help="paper-scale settings (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma-separated module subset")
+    ap.add_argument("--trace", default="",
+                    help="export a Perfetto trace_event JSON of the whole "
+                         "benchmark run (repro.obs) to this path")
     args = ap.parse_args()
     only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().enable(mode="ring", capacity=1 << 18)
 
     rows = []
     failed = []
@@ -56,6 +63,11 @@ def main() -> None:
             failed.append(name)
             rows.append({"name": f"{name}/ERROR", "error": "see stderr"})
     emit(rows)
+    if args.trace:
+        from repro.obs import write_trace
+        doc = write_trace(args.trace)
+        print(f"# wrote trace ({doc['otherData']['spans']} spans) to "
+              f"{args.trace}", file=sys.stderr)
     if failed:
         print(f"# FAILED modules: {failed}", file=sys.stderr)
         raise SystemExit(1)

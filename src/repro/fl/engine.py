@@ -59,6 +59,7 @@ from repro.fl.base import (
     rounds_to_targets,
 )
 from repro.models.common import softmax_xent
+from repro.obs import CounterSet, span
 from repro.optim import SGDConfig, masked_sgd_step, sgd_step
 from repro.sparse import pack_tree, unpack_mask_tree, unpack_tree
 from repro.utils.tree import tree_index, tree_nnz, tree_size, tree_stack
@@ -452,6 +453,12 @@ class RoundEngine:
             "per_round_flops": [], "dense_per_round_flops": [],
             "fwd_flops_per_sample": []}
         self._vmap_fns: dict[bool, Callable] = {}
+        self.obs = CounterSet("fl.engine")
+        self.obs.gauge("rounds_completed", fn=lambda: self._next_round)
+        self.obs.gauge("cum_flops", fn=lambda: float(
+            np.sum(self._flops["per_round_flops"])))
+        self.obs.gauge("comm_total_mb", fn=lambda: float(
+            np.sum(self._comm["total_mb"])))
 
     # -- control -----------------------------------------------------------
     def request_stop(self) -> None:
@@ -539,12 +546,16 @@ class RoundEngine:
         t0 = time.perf_counter()
         ctx = self._make_ctx(t)
         self._pre_round(ctx)
-        strat.mix(self.state, ctx)
+        with span("round.mix", track="engine", round=t):
+            strat.mix(self.state, ctx)
         active = list(strat.active_clients(self.state, ctx))
-        self.run_local_phase(ctx, active)
-        for k in active:
-            strat.evolve(self.state, k, ctx)
-        strat.post_round(self.state, ctx)
+        with span("round.local", track="engine", round=t,
+                  active=len(active)):
+            self.run_local_phase(ctx, active)
+        with span("round.evolve", track="engine", round=t):
+            for k in active:
+                strat.evolve(self.state, k, ctx)
+            strat.post_round(self.state, ctx)
 
         comm = strat.round_comm(self.state, ctx)
         flops = strat.round_flops(self.state, ctx)
@@ -555,8 +566,10 @@ class RoundEngine:
 
         acc_mean = acc_std = None
         if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            accs = evaluate_clients(
-                self.task, strat.eval_params(self.state, ctx), self.clients)
+            with span("round.eval", track="engine", round=t):
+                accs = evaluate_clients(
+                    self.task, strat.eval_params(self.state, ctx),
+                    self.clients)
             acc_mean = float(np.mean(accs))
             acc_std = float(np.std(accs))
             self._acc_history.append(acc_mean)

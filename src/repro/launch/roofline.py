@@ -167,3 +167,41 @@ def build_report(arch_cfg, shape, mesh_name: str, chips: int,
         per_device_coll_bytes=coll_bytes_per_device,
         model_flops_global=model_flops(arch_cfg, shape, density),
     ).finalize()
+
+
+def measured_phase_rows(phase_summary: dict,
+                        analytic: Optional[dict] = None) -> list[dict]:
+    """Predicted-vs-observed rows from a ``repro.obs`` run.
+
+    ``phase_summary`` is ``repro.obs.export.phase_summary`` output
+    (``{phase: {count, total_s, mean_s, max_s}}`` of *measured* spans);
+    ``analytic`` optionally maps a phase name to ``(quantity, unit)`` with
+    unit ``"flops"`` or ``"bytes"`` — the analytic cost of ONE call, priced
+    on the reference chip (peak FLOP/s or HBM bandwidth) into a predicted
+    ms so the report shows the roofline model next to what the host
+    actually spent.  ``achieved_per_s`` is quantity / observed seconds —
+    the honest rate, however far from the roof the host is.
+    """
+    rates = {"flops": PEAK_FLOPS, "bytes": HBM_BW}
+    rows = []
+    for phase in sorted(phase_summary):
+        agg = phase_summary[phase]
+        row = {
+            "phase": phase,
+            "calls": int(agg["count"]),
+            "observed_ms_per_call": round(agg["mean_s"] * 1e3, 4),
+            "observed_total_ms": round(agg["total_s"] * 1e3, 3),
+        }
+        spec = (analytic or {}).get(phase)
+        if spec is not None:
+            quantity, unit = spec
+            if unit not in rates:
+                raise ValueError(f"analytic unit must be flops|bytes, "
+                                 f"got {unit!r}")
+            row["analytic_" + unit] = float(quantity)
+            row["predicted_ms_per_call"] = round(
+                quantity / rates[unit] * 1e3, 6)
+            if agg["mean_s"] > 0:
+                row["achieved_per_s"] = float(quantity / agg["mean_s"])
+        rows.append(row)
+    return rows

@@ -79,26 +79,43 @@ def main() -> None:
                     dest="metrics_every")
     ap.add_argument("--metrics-jsonl", default="-", dest="metrics_jsonl",
                     help="stream JSON lines here ('-': stdout)")
+    ap.add_argument("--trace", default="",
+                    help="export a Perfetto-loadable trace_event JSON of "
+                         "the run (repro.obs) to this path")
+    ap.add_argument("--trace-mode", default=None, dest="trace_mode",
+                    choices=["ring", "full"],
+                    help="span recorder: ring = bounded buffer (default), "
+                         "full = keep every span")
     args = ap.parse_args()
+    if args.trace_mode is not None and not args.trace:
+        ap.error("--trace-mode requires --trace")
 
     from repro.serve.batcher import RequestStream
     from repro.serve.engine import ServeEngine
     from repro.sim.report import MetricsStream
 
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().enable(mode=args.trace_mode or "ring")
+
     model = build_model(args.model, args.rows)
     store = build_store(args, model)
     n_users = len(store.users()) or args.users
 
-    stream = MetricsStream(args.metrics_jsonl)
-    stream.emit({"event": "store", **store.stats(),
-                 "model": args.model, "backend": args.backend})
-    engine = ServeEngine(store, model, backend=args.backend,
-                         max_batch=args.max_batch, max_wait=args.max_wait,
-                         metrics=stream, metrics_every=args.metrics_every)
-    requests = RequestStream(n_users=n_users, n_requests=args.requests,
-                             seed=args.seed, rate=args.rate)
-    engine.serve(requests)
-    stream.close()
+    with MetricsStream(args.metrics_jsonl) as stream:
+        stream.emit({"event": "store", **store.stats(),
+                     "model": args.model, "backend": args.backend})
+        engine = ServeEngine(store, model, backend=args.backend,
+                             max_batch=args.max_batch, max_wait=args.max_wait,
+                             metrics=stream, metrics_every=args.metrics_every)
+        requests = RequestStream(n_users=n_users, n_requests=args.requests,
+                                 seed=args.seed, rate=args.rate)
+        engine.serve(requests)
+    if args.trace:
+        from repro.obs import write_trace
+        doc = write_trace(args.trace)
+        print(f"wrote trace ({doc['otherData']['spans']} spans) to "
+              f"{args.trace} — open at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

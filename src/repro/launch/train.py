@@ -134,6 +134,9 @@ def run_simulate(args) -> dict:
     if args.resume:
         engine.restore(args.resume)
         print(f"resumed from {args.resume} at round {engine._next_round}")
+    if args.trace:
+        from repro.obs import get_tracer
+        get_tracer().enable(mode=args.trace_mode or "ring")
 
     t0 = time.time()
     for m in engine.rounds():
@@ -155,6 +158,11 @@ def run_simulate(args) -> dict:
         targets = (args.target,) if args.target > 0 else ()
         out["sim"] = engine.report(targets=targets).row()
     print(json.dumps(out, indent=2))
+    if args.trace:
+        from repro.obs import write_trace
+        doc = write_trace(args.trace)
+        print(f"wrote trace ({doc['otherData']['spans']} spans) to "
+              f"{args.trace} — open at https://ui.perfetto.dev")
     if args.save:
         save_clients(args.save, [{"final_acc": np.asarray(a)}
                                  for a in res.final_accs])
@@ -296,6 +304,13 @@ def main() -> None:
                      help="restore engine state from this .npz and continue")
     sim.add_argument("--target", type=float, default=0.0,
                      help="early-stop once mean personalized acc >= target")
+    sim.add_argument("--trace", default="",
+                     help="export a Perfetto-loadable trace_event JSON of "
+                          "the run (repro.obs) to this path")
+    sim.add_argument("--trace-mode", default=None, dest="trace_mode",
+                     choices=["ring", "full"],
+                     help="span recorder: ring = bounded buffer (default), "
+                          "full = keep every span")
     # client-sharded SPMD execution (repro.scale)
     sim.add_argument("--scale", action="store_true",
                      help="run through ScaleEngine: the whole round "
@@ -378,6 +393,8 @@ def main() -> None:
     if args.mode == "simulate":
         if args.scale and args.sim:
             ap.error("--scale and --sim are mutually exclusive engines")
+        if args.trace_mode is not None and not args.trace:
+            ap.error("--trace-mode requires --trace")
         if not args.scale:
             scale_only = {"--mesh-shape": bool(args.mesh_shape),
                           "--scale-reduction":

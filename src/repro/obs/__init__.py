@@ -1,0 +1,65 @@
+"""repro.obs — unified tracing, counters, and profile export.
+
+One observability layer shared by all four engines (``repro.fl.engine``,
+``repro.sim``, ``repro.scale``, ``repro.serve``) and the sparse codec:
+
+* ``trace``    — nestable ``span("phase", **attrs)`` on named tracks,
+  wall- and virtual-clock, ring-buffered, near-zero cost when disabled;
+* ``counters`` — monotonic counters / gauges in namespaced ``CounterSet``
+  bundles with a process-wide snapshot, plus the ``jax.monitoring``
+  compile-event bridge;
+* ``export``   — Chrome/Perfetto ``trace_event`` JSON export and the
+  single place the streaming JSONL schema is versioned.
+
+Importing this package never imports jax (hot paths stay light); see
+``docs/observability.md`` for schema, counter names and trace tracks.
+"""
+from repro.obs.counters import (
+    Counter,
+    CounterSet,
+    Gauge,
+    install_jax_hooks,
+    jax_compile_count,
+    snapshot_counters,
+)
+from repro.obs.export import (
+    JSONL_SCHEMA_VERSION,
+    TRACE_SCHEMA_VERSION,
+    phase_summary,
+    to_trace_events,
+    validate_trace,
+    write_trace,
+)
+from repro.obs.trace import (
+    VIRTUAL,
+    WALL,
+    Span,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    span,
+    traced,
+)
+
+__all__ = [
+    "Counter",
+    "CounterSet",
+    "Gauge",
+    "JSONL_SCHEMA_VERSION",
+    "Span",
+    "TRACE_SCHEMA_VERSION",
+    "Tracer",
+    "VIRTUAL",
+    "WALL",
+    "get_tracer",
+    "install_jax_hooks",
+    "jax_compile_count",
+    "phase_summary",
+    "set_tracer",
+    "snapshot_counters",
+    "span",
+    "to_trace_events",
+    "traced",
+    "validate_trace",
+    "write_trace",
+]

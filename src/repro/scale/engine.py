@@ -51,6 +51,7 @@ from repro.fl.base import (
 from repro.fl.engine import Callback, RoundCtx, RoundEngine, RoundMetrics, StrategyBase
 from repro.core.accounting import CommReport, FlopsReport
 from repro.models.common import softmax_xent
+from repro.obs import CounterSet, install_jax_hooks, jax_compile_count, span
 from repro.optim import SGDConfig
 from repro.scale.stacked import (
     pack_stacked,
@@ -98,6 +99,14 @@ class ScaleEngine(RoundEngine):
                               weight_decay=cfg.weight_decay)
         self._round_step = None
         self._eval_arrays = None
+        # compile-vs-execute observability: the jax.monitoring bridge makes
+        # "traced scalars never recompile" an assertable counter — one
+        # backend compile on the first step, zero after, whatever the
+        # lr/prune schedule does (tests/test_obs.py pins this)
+        install_jax_hooks()
+        self.scale_obs = CounterSet("scale.engine")
+        self._c_step_calls = self.scale_obs.counter("step_calls")
+        self._c_step_compiles = self.scale_obs.counter("step_compiles")
 
     # ------------------------------------------------------------------
     # construction-time checks
@@ -175,6 +184,12 @@ class ScaleEngine(RoundEngine):
             self._round_step = self._build_round_step()
         return self._round_step
 
+    @property
+    def step_compiles(self) -> int:
+        """Rounds whose step dispatch triggered a backend compile — the
+        "traced scalars never recompile" invariant says this stays at 1."""
+        return int(self._c_step_compiles.value)
+
     # ------------------------------------------------------------------
     # host-side per-round inputs (identical draws to the reference engine)
     # ------------------------------------------------------------------
@@ -232,9 +247,19 @@ class ScaleEngine(RoundEngine):
             ev_x = ev_y = None
         mix = jnp.asarray(self.adapter.mix_matrix(ctx))
         counts = self.adapter.evolve_counts(ctx)
-        self.state = self._step_fn()(
-            self.state, mix, bx, by, live, ev_x, ev_y,
-            jnp.float32(ctx.lr), counts)
+        # snapshot the compile counter around the step dispatch only —
+        # _stacked_eval below jit-compiles separately and must not pollute
+        # the "the round step compiled" signal
+        n_compiles = jax_compile_count()
+        with span("scale.step", track="engine", round=t) as sp:
+            self.state = self._step_fn()(
+                self.state, mix, bx, by, live, ev_x, ev_y,
+                jnp.float32(ctx.lr), counts)
+            delta = jax_compile_count() - n_compiles
+            sp.attrs["compiles"] = delta
+        self._c_step_calls.inc()
+        if delta > 0:
+            self._c_step_compiles.inc()
 
         comm = self.adapter.round_comm(self.state, ctx)
         flops = self.adapter.round_flops(ctx)

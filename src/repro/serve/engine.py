@@ -33,6 +33,7 @@ from typing import Any, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.obs import VIRTUAL, get_tracer, span
 from repro.serve.batcher import Batch, MicroBatcher, Request, RequestStream
 from repro.serve.store import ModelStore
 
@@ -100,18 +101,22 @@ class ServeEngine:
         if xs is None:
             xs = [self.model.make_input(r.input_seed) for r in reqs]
         t0 = time.perf_counter()
-        slots = [self.store.acquire(r.user) for r in reqs]
-        assert len(set(slots)) == len(slots), \
-            "batch holds two requests for one pool slot (same user?)"
-        x_pool = np.zeros((self.store.cache_size,) + xs[0].shape,
-                          dtype=xs[0].dtype)
-        for s, x in zip(slots, xs):
-            x_pool[s] = x
-        y = self.model.batched_forward(self.store.pool_params,
-                                       self.store.pool_masks, x_pool,
-                                       backend=self.backend,
-                                       interpret=self.interpret)
-        y = np.asarray(jax.block_until_ready(y))
+        with span("serve.launch", track="serve", batch=len(reqs)):
+            with span("serve.acquire", track="serve"):
+                slots = [self.store.acquire(r.user) for r in reqs]
+            assert len(set(slots)) == len(slots), \
+                "batch holds two requests for one pool slot (same user?)"
+            with span("serve.scatter", track="serve"):
+                x_pool = np.zeros((self.store.cache_size,) + xs[0].shape,
+                                  dtype=xs[0].dtype)
+                for s, x in zip(slots, xs):
+                    x_pool[s] = x
+            with span("serve.forward", track="serve"):
+                y = self.model.batched_forward(self.store.pool_params,
+                                               self.store.pool_masks, x_pool,
+                                               backend=self.backend,
+                                               interpret=self.interpret)
+                y = np.asarray(jax.block_until_ready(y))
         service_s = time.perf_counter() - t0
         return y[np.asarray(slots)], service_s
 
@@ -140,10 +145,13 @@ class ServeEngine:
                                resident=self.store.resident)
         outputs: dict[int, np.ndarray] = {}
         latencies: list[float] = []
+        waits_ms: list[float] = []
+        services_ms: list[float] = []
         service_total = 0.0
         n_batches = 0
         n_served = 0
         t_wall0 = time.perf_counter()
+        tr = get_tracer()
         for batch in batcher.batches():
             xs = [self.model.make_input(r.input_seed)
                   for r in batch.requests]
@@ -155,6 +163,14 @@ class ServeEngine:
                     zip(batch.requests, batch.queue_waits())):
                 outputs[req.rid] = y[i]
                 latencies.append(wait * 1e3 + service_s * 1e3)
+                waits_ms.append(wait * 1e3)
+                services_ms.append(service_s * 1e3)
+                if tr.enabled:
+                    # batcher-wait on the request's virtual timeline — the
+                    # queueing component of its reported latency
+                    tr.add_span("request.wait", req.t_arrival, batch.t_flush,
+                                track=f"user/{req.user}", clock=VIRTUAL,
+                                rid=req.rid)
             if self.metrics and n_batches % self.metrics_every == 0:
                 self.metrics.emit({
                     "event": "serve", "batches": n_batches,
@@ -175,6 +191,11 @@ class ServeEngine:
             "mean_batch": round(n_served / max(n_batches, 1), 2),
             "p50_ms": round(_percentile(latencies, 50), 3),
             "p99_ms": round(_percentile(latencies, 99), 3),
+            # honest latency components: queue wait vs launch service
+            "p50_wait_ms": round(_percentile(waits_ms, 50), 3),
+            "p99_wait_ms": round(_percentile(waits_ms, 99), 3),
+            "p50_service_ms": round(_percentile(services_ms, 50), 3),
+            "p99_service_ms": round(_percentile(services_ms, 99), 3),
             "requests_per_s": round(n_served / max(service_total, 1e-9), 1),
             "service_s": round(service_total, 4),
             "wall_s": round(wall_s, 4),

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import CounterSet, get_tracer, span
 from repro.sparse import (
     TreeSpec,
     decode_dense,
@@ -92,9 +93,17 @@ class ModelStore:
             lambda pool, slot, new: jax.tree.map(
                 lambda buf, x: buf.at[slot].set(x), pool, new),
             donate_argnums=(0,))
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # hit/miss/eviction counters live in the process-wide registry so
+        # an exported trace reconciles against them; the attribute API
+        # (`store.hits` etc.) is preserved via properties below
+        self.obs = CounterSet("serve.store")
+        self._c_hits = self.obs.counter("hits")
+        self._c_misses = self.obs.counter("misses")
+        self._c_evictions = self.obs.counter("evictions")
+        self.obs.gauge("resident", fn=lambda: len(self._slot_of))
+        self.obs.gauge("bytes_at_rest", fn=self.total_bytes_at_rest)
+        # per-slot residency: an open wall-clock span per occupied slot
+        self._slot_handles: dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # write path
@@ -110,11 +119,21 @@ class ModelStore:
         slot = self._slot_of.pop(user, None)        # stale unpacked copy
         if slot is not None:
             self._free.append(slot)
+            self._end_residency(slot)
         return len(frame)
 
     # ------------------------------------------------------------------
     # read path (through the slot-pool LRU cache)
     # ------------------------------------------------------------------
+    def _end_residency(self, slot: int) -> None:
+        get_tracer().end(self._slot_handles.pop(slot, None))
+
+    def _begin_residency(self, slot: int, user: int) -> None:
+        tr = get_tracer()
+        if tr.enabled:
+            self._slot_handles[slot] = tr.begin(
+                f"user:{user}", track=f"slot/{slot}", user=user)
+
     def acquire(self, user: int) -> int:
         """Slot index of the user's unpacked model, loading it into the
         pool on a miss (evicting the least recently served user if full).
@@ -122,25 +141,29 @@ class ModelStore:
         distinct-user acquires."""
         slot = self._slot_of.get(user)
         if slot is not None:
-            self.hits += 1
+            self._c_hits.inc()
             self._slot_of.move_to_end(user)
             return slot
-        self.misses += 1
-        frame = self._frames.get(user)
-        if frame is None:
-            entry = {"params": self.base,
-                     "masks": tree_ones_like(self.base)}
-        else:
-            # fused single-pass host decode: this is the serving hot path
-            params, masks = decode_dense(frame, self.spec)
-            entry = {"params": params, "masks": masks}
-        if self._free:
-            slot = self._free.pop()
-        else:
-            _, slot = self._slot_of.popitem(last=False)
-            self.evictions += 1
-        self._pool = self._write(self._pool, slot, entry)
-        self._slot_of[user] = slot
+        self._c_misses.inc()
+        with span("store.miss_decode", track="store", user=user) as sp:
+            frame = self._frames.get(user)
+            if frame is None:
+                entry = {"params": self.base,
+                         "masks": tree_ones_like(self.base)}
+            else:
+                # fused single-pass host decode: the serving hot path
+                params, masks = decode_dense(frame, self.spec)
+                entry = {"params": params, "masks": masks}
+                sp.attrs["nbytes"] = len(frame)
+            if self._free:
+                slot = self._free.pop()
+            else:
+                _, slot = self._slot_of.popitem(last=False)
+                self._c_evictions.inc()
+            self._end_residency(slot)
+            self._pool = self._write(self._pool, slot, entry)
+            self._slot_of[user] = slot
+            self._begin_residency(slot, user)
         return slot
 
     def get(self, user: int) -> tuple[PyTree, PyTree]:
@@ -172,8 +195,23 @@ class ModelStore:
     def users(self) -> list[int]:
         return sorted(self._frames)
 
+    # cache counters (registry-backed; attribute API preserved)
+    @property
+    def hits(self) -> int:
+        return int(self._c_hits.value)
+
+    @property
+    def misses(self) -> int:
+        return int(self._c_misses.value)
+
+    @property
+    def evictions(self) -> int:
+        return int(self._c_evictions.value)
+
     def reset_counters(self) -> None:
-        self.hits = self.misses = self.evictions = 0
+        self._c_hits.reset()
+        self._c_misses.reset()
+        self._c_evictions.reset()
 
     # ------------------------------------------------------------------
     # accounting

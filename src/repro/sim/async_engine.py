@@ -93,6 +93,7 @@ from repro.fl.engine import (
     _pack,
     _unpack,
 )
+from repro.obs import VIRTUAL, get_tracer
 from repro.sim.availability import AlwaysUp, Availability
 from repro.sim.events import (
     ARRIVAL,
@@ -212,6 +213,9 @@ class SimEngine(RoundEngine):
         self.mixed_messages = 0           # neighbor models mixed over the run
         self._pending_edges = None        # sync: this round's message sizes
         self._as: Optional[_AsyncState] = None   # async event-loop state
+        # trace-only transient: virtual time each SSP-blocked client started
+        # waiting (not checkpointed — resumed runs restart open waits)
+        self._wait_since: dict[int, float] = {}
 
     # ------------------------------------------------------------------
     # shared
@@ -237,6 +241,25 @@ class SimEngine(RoundEngine):
     # ------------------------------------------------------------------
     # transfers: shared uplink + loss/retransmit (both modes)
     # ------------------------------------------------------------------
+    def _trace_xfer(self, src: int, dst: int, bytes_v: float, bytes_w: float,
+                    t_start: float, t_end: float, attempt: int) -> None:
+        """Mirror one ``LinkStats.record`` as virtual-clock trace spans —
+        same floats, so trace spans reconcile with the transfer log
+        bit-for-bit.  A per-edge span on ``link/src->dst`` plus, under a
+        shared-uplink discipline, the serialization slot on ``uplink/src``
+        (the arrival minus propagation latency is when the uplink frees)."""
+        tr = get_tracer()
+        if not tr.enabled:
+            return
+        tr.add_span("retransmit" if attempt else "transfer",
+                    t_start, t_end, track=f"link/{src}->{dst}", clock=VIRTUAL,
+                    src=src, dst=dst, bytes_values=bytes_v,
+                    bytes_wire=bytes_w, attempt=attempt)
+        if self.uplink.mode != "parallel":
+            tr.add_span("uplink.busy", t_start,
+                        t_end - float(self.links.latency_s[src, dst]),
+                        track=f"uplink/{src}", clock=VIRTUAL, dst=dst)
+
     def _transmit(self, src: int, jobs: list[tuple[int, float, float]],
                   t_request: float, tag: int,
                   reliable: bool) -> list[tuple[int, bool, float]]:
@@ -254,6 +277,7 @@ class SimEngine(RoundEngine):
                                    if self.loss is not None else (1, True))
             self.stats.record(src, dst, bytes_v, bytes_w, t_start, t_end,
                               attempt=0)
+            self._trace_xfer(src, dst, bytes_v, bytes_w, t_start, t_end, 0)
             end = t_end
             for a in range(1, attempts):
                 t_retry = (end - float(self.links.latency_s[src, dst])
@@ -262,6 +286,7 @@ class SimEngine(RoundEngine):
                     self.links, src, [(dst, bytes_w)], t_retry)
                 self.stats.record(src, dst, bytes_v, bytes_w, t2, e2,
                                   attempt=a)
+                self._trace_xfer(src, dst, bytes_v, bytes_w, t2, e2, a)
                 end = e2
             if reliable:
                 delivered = True
@@ -269,6 +294,15 @@ class SimEngine(RoundEngine):
                 self.stats.record_lost(src, dst)
             out.append((dst, delivered, end))
         return out
+
+    def _end_waits(self, ks, t_now: float) -> None:
+        """Close ``ssp.wait`` spans for clients unblocked at ``t_now``."""
+        tr = get_tracer()
+        for k in ks:
+            t0 = self._wait_since.pop(int(k), None)
+            if t0 is not None and tr.enabled:
+                tr.add_span("ssp.wait", t0, t_now, track=f"client/{int(k)}",
+                            clock=VIRTUAL)
 
     # ------------------------------------------------------------------
     # checkpoint / resume
@@ -455,6 +489,11 @@ class SimEngine(RoundEngine):
             self.compute.local_time(k, metrics.flops_round)
             for k in range(n)])
         dur = float(compute_s.max()) if n else 0.0
+        tr = get_tracer()
+        if tr.enabled:
+            for k in range(n):
+                tr.add_span("compute", t0, t0 + float(compute_s[k]),
+                            track=f"client/{k}", clock=VIRTUAL, round=ctx.t)
         if edges is not None:
             edges_v, edges_w = edges
             for src in range(n):
@@ -651,6 +690,7 @@ class SimEngine(RoundEngine):
                     st.inbox[k][src] = msg
                 if k in st.waiting:
                     st.waiting.discard(k)
+                    self._end_waits([k], ev.time)
                     st.q.push(ev.time, WAKE, k=k)
                 continue
 
@@ -666,9 +706,11 @@ class SimEngine(RoundEngine):
                 else:
                     st.q.push(ev.time, WAKE, k=k)
                 if self._live_floor(st) > st.emitted:
-                    for w in sorted(st.waiting):
+                    waiters = sorted(st.waiting)
+                    for w in waiters:
                         st.q.push(ev.time, WAKE, k=w)
                     st.waiting.clear()
+                    self._end_waits(waiters, ev.time)
                     for m in self._emit_ready_rounds(st):
                         for cb in self.callbacks:
                             cb.on_round_end(self, m)
@@ -686,6 +728,7 @@ class SimEngine(RoundEngine):
             spread = t_k - self._live_floor(st)
             if self.staleness >= 0 and spread > self.staleness:
                 st.waiting.add(k)
+                self._wait_since.setdefault(k, ev.time)
                 continue
             # availability: a down client retries one mean-round later
             # against its next slot; after max_down_retries consecutive down
@@ -696,9 +739,11 @@ class SimEngine(RoundEngine):
                 if st.down_streak[k] > self.max_down_retries:
                     st.dead.add(k)
                     st.done.add(k)
-                    for w in sorted(st.waiting):
+                    waiters = sorted(st.waiting)
+                    for w in waiters:
                         st.q.push(ev.time, WAKE, k=w)
                     st.waiting.clear()
+                    self._end_waits(waiters, ev.time)
                     for m in self._emit_ready_rounds(st):
                         for cb in self.callbacks:
                             cb.on_round_end(self, m)
@@ -742,6 +787,10 @@ class SimEngine(RoundEngine):
             # message that exhausts its budget never ARRIVEs
             flops = strat.round_flops(self.state, ctx).per_round_flops
             finish = ev.time + self.compute.local_time(k, flops)
+            tr = get_tracer()
+            if tr.enabled:
+                tr.add_span("compute", ev.time, finish, track=f"client/{k}",
+                            clock=VIRTUAL, round=t_k)
             payload = strat.snapshot_message(self.state, k)
             bytes_v, bytes_w = measure_payload(payload)
             msg = _Message(version=t_k + 1, payload=payload)
@@ -758,6 +807,7 @@ class SimEngine(RoundEngine):
         # the run ends when the last client finishes its compute, even if
         # some already-sent messages are still in flight
         self.clock.advance_to(max(st.last_finish, self.clock.now))
+        self._end_waits(list(self._wait_since), self.clock.now)
         for m in self._emit_ready_rounds(st):
             for cb in self.callbacks:
                 cb.on_round_end(self, m)

@@ -34,6 +34,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.accounting import message_bytes
+from repro.obs import CounterSet
 from repro.sparse import PackedSparse, codec
 from repro.utils.tree import tree_nnz, tree_size
 
@@ -319,6 +320,15 @@ class LinkStats:
         self.n_retransmits = 0
         self.n_lost = 0                      # messages never delivered
         self.transfers: list[Transfer] = []
+        # gauges mirror the checkpointed accumulators (single source of
+        # truth stays here), so snapshot_counters() reconciles exactly with
+        # the virtual-clock transfer spans in an exported trace
+        self.obs = CounterSet("sim.links")
+        self.obs.gauge("transfers", fn=lambda: len(self.transfers))
+        self.obs.gauge("n_retransmits", fn=lambda: self.n_retransmits)
+        self.obs.gauge("n_lost", fn=lambda: self.n_lost)
+        self.obs.gauge("bytes_values", fn=lambda: float(self.up.sum()))
+        self.obs.gauge("bytes_wire", fn=lambda: float(self.up_wire.sum()))
 
     def record(self, src: int, dst: int, bytes_values: float,
                bytes_wire: float, t_start: float, t_end: float,

@@ -22,32 +22,59 @@ from repro.sim.links import MB, LinkStats
 
 class MetricsStream:
     """Append one JSON object per line to a file or stdout, flushing each
-    line so consumers see metrics live."""
+    line so consumers see metrics live.
 
-    def __init__(self, path: str = "-"):
+    ``append=True`` opens real files in append mode — a run resumed from a
+    checkpoint keeps the lines streamed before the cut instead of
+    clobbering them.  ``header=True`` prefixes the stream with one
+    ``{"event": "schema", "version": N}`` record (the JSONL schema version
+    lives in ``repro.obs.export``).  ``close`` only closes handles this
+    stream opened — never stdout, even if ``sys.stdout`` was rebound
+    between open and close — and the stream is a context manager."""
+
+    def __init__(self, path: str = "-", append: bool = False,
+                 header: bool = False):
         self.path = path
+        self.append = bool(append)
+        self.header = bool(header)
         self._fh: Optional[IO] = None
+        self._owns = False          # True iff we opened (and must close) it
+        self._header_written = False
 
     def _handle(self) -> IO:
         if self._fh is None:
             if self.path in ("-", ""):
                 self._fh = sys.stdout
+                self._owns = False
             else:
                 import os
                 d = os.path.dirname(os.path.abspath(self.path))
                 os.makedirs(d, exist_ok=True)
-                self._fh = open(self.path, "w")
+                self._fh = open(self.path, "a" if self.append else "w")
+                self._owns = True
         return self._fh
 
     def emit(self, record: dict) -> None:
         fh = self._handle()
+        if self.header and not self._header_written:
+            self._header_written = True
+            from repro.obs import JSONL_SCHEMA_VERSION
+            fh.write(json.dumps({"event": "schema",
+                                 "version": JSONL_SCHEMA_VERSION}) + "\n")
         fh.write(json.dumps(record) + "\n")
         fh.flush()
 
     def close(self) -> None:
-        if self._fh is not None and self._fh is not sys.stdout:
+        if self._fh is not None and self._owns:
             self._fh.close()
         self._fh = None
+        self._owns = False
+
+    def __enter__(self) -> "MetricsStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 @dataclasses.dataclass

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accounting import HEADER_NBYTES, bitmap_nbytes
+from repro.obs import CounterSet, span
 from repro.sparse.packed import (
     PackedSparse,
     _is_packed,
@@ -43,6 +44,16 @@ from repro.sparse.packed import (
 )
 
 PyTree = Any
+
+# wire-format observability: frame counts and exact byte totals, shared by
+# every engine that touches the codec (ROADMAP's serialization-bottleneck
+# claim becomes measurable per run: span timers + these byte counters)
+OBS = CounterSet("sparse.codec")
+_C_ENCODES = OBS.counter("encodes")
+_C_BYTES_OUT = OBS.counter("bytes_out")
+_C_DECODES = OBS.counter("decodes")
+_C_DENSE_DECODES = OBS.counter("dense_decodes")
+_C_BYTES_IN = OBS.counter("bytes_in")
 
 MAGIC = 0x5350            # "SP"
 VERSION = 1
@@ -100,26 +111,31 @@ def encoded_nbytes(packed: PyTree) -> int:
 
 def encode(packed: PyTree) -> bytes:
     """Serialize a packed tree to one wire frame (little-endian)."""
-    leaves = _leaves(packed)
-    dtype = np.asarray(leaves[0].values).dtype
-    if dtype not in _DTYPE_CODES:
-        raise ValueError(f"unsupported wire dtype {dtype}")
-    if any(np.asarray(p.values).dtype != dtype for p in leaves):
-        raise ValueError("all leaves of one message must share a value dtype")
-    # concatenate leaf bit-streams with no inter-leaf padding, then repack
-    flags = np.concatenate(
-        [_unpack_bits(np.asarray(p.bitmap), p.n_coords) for p in leaves]
-    ) if leaves else np.zeros(0, dtype=bool)
-    words = _pack_bits(flags)
-    values = (np.concatenate([np.asarray(p.values) for p in leaves])
-              if leaves else np.zeros(0, dtype))
-    nnz = int(values.size)
-    out = b"".join([
-        _HEADER.pack(MAGIC, VERSION, _DTYPE_CODES[dtype], nnz),
-        words.astype("<u4").tobytes(),
-        values.astype(values.dtype.newbyteorder("<")).tobytes(),
-    ])
-    assert len(out) == encoded_nbytes(packed)
+    with span("codec.encode", track="codec") as sp:
+        leaves = _leaves(packed)
+        dtype = np.asarray(leaves[0].values).dtype
+        if dtype not in _DTYPE_CODES:
+            raise ValueError(f"unsupported wire dtype {dtype}")
+        if any(np.asarray(p.values).dtype != dtype for p in leaves):
+            raise ValueError(
+                "all leaves of one message must share a value dtype")
+        # concatenate leaf bit-streams with no inter-leaf padding, repack
+        flags = np.concatenate(
+            [_unpack_bits(np.asarray(p.bitmap), p.n_coords) for p in leaves]
+        ) if leaves else np.zeros(0, dtype=bool)
+        words = _pack_bits(flags)
+        values = (np.concatenate([np.asarray(p.values) for p in leaves])
+                  if leaves else np.zeros(0, dtype))
+        nnz = int(values.size)
+        out = b"".join([
+            _HEADER.pack(MAGIC, VERSION, _DTYPE_CODES[dtype], nnz),
+            words.astype("<u4").tobytes(),
+            values.astype(values.dtype.newbyteorder("<")).tobytes(),
+        ])
+        assert len(out) == encoded_nbytes(packed)
+        sp.attrs["nbytes"] = len(out)
+        _C_ENCODES.inc()
+        _C_BYTES_OUT.inc(len(out))
     return out
 
 
@@ -145,21 +161,25 @@ def _frame_arrays(data: bytes, spec: TreeSpec):
 
 def decode(data: bytes, spec: TreeSpec) -> PyTree:
     """Rebuild the packed tree from one frame + its out-of-band schema."""
-    flags, values, nnz = _frame_arrays(data, spec)
-    leaves, pos, vpos = [], 0, 0
-    for shape in spec.shapes:
-        n = int(np.prod(shape))
-        leaf_flags = flags[pos:pos + n]
-        k = int(leaf_flags.sum())
-        leaves.append(PackedSparse(
-            bitmap=jnp.asarray(_pack_bits(leaf_flags)),
-            values=jnp.asarray(values[vpos:vpos + k]),
-            shape=tuple(shape)))
-        pos += n
-        vpos += k
-    if vpos != nnz:
-        raise ValueError(f"frame carries {nnz} values, schema holds {vpos}")
-    return jax.tree.unflatten(spec.treedef, leaves)
+    with span("codec.decode", track="codec", nbytes=len(data)):
+        _C_DECODES.inc()
+        _C_BYTES_IN.inc(len(data))
+        flags, values, nnz = _frame_arrays(data, spec)
+        leaves, pos, vpos = [], 0, 0
+        for shape in spec.shapes:
+            n = int(np.prod(shape))
+            leaf_flags = flags[pos:pos + n]
+            k = int(leaf_flags.sum())
+            leaves.append(PackedSparse(
+                bitmap=jnp.asarray(_pack_bits(leaf_flags)),
+                values=jnp.asarray(values[vpos:vpos + k]),
+                shape=tuple(shape)))
+            pos += n
+            vpos += k
+        if vpos != nnz:
+            raise ValueError(
+                f"frame carries {nnz} values, schema holds {vpos}")
+        return jax.tree.unflatten(spec.treedef, leaves)
 
 
 def decode_dense(data: bytes, spec: TreeSpec,
@@ -173,19 +193,23 @@ def decode_dense(data: bytes, spec: TreeSpec,
     ``decode`` + ``unpack_tree`` + ``unpack_mask_tree`` does the bitmap
     work three times and bounces every leaf through the device.
     """
-    flags, values, nnz = _frame_arrays(data, spec)
-    params, masks, pos, vpos = [], [], 0, 0
-    for shape in spec.shapes:
-        n = int(np.prod(shape))
-        leaf_flags = flags[pos:pos + n]
-        k = int(leaf_flags.sum())
-        dense = np.zeros(n, dtype=values.dtype)
-        dense[leaf_flags] = values[vpos:vpos + k]
-        params.append(dense.reshape(shape))
-        masks.append(leaf_flags.reshape(shape).astype(mask_dtype))
-        pos += n
-        vpos += k
-    if vpos != nnz:
-        raise ValueError(f"frame carries {nnz} values, schema holds {vpos}")
-    return (jax.tree.unflatten(spec.treedef, params),
-            jax.tree.unflatten(spec.treedef, masks))
+    with span("codec.decode_dense", track="codec", nbytes=len(data)):
+        _C_DENSE_DECODES.inc()
+        _C_BYTES_IN.inc(len(data))
+        flags, values, nnz = _frame_arrays(data, spec)
+        params, masks, pos, vpos = [], [], 0, 0
+        for shape in spec.shapes:
+            n = int(np.prod(shape))
+            leaf_flags = flags[pos:pos + n]
+            k = int(leaf_flags.sum())
+            dense = np.zeros(n, dtype=values.dtype)
+            dense[leaf_flags] = values[vpos:vpos + k]
+            params.append(dense.reshape(shape))
+            masks.append(leaf_flags.reshape(shape).astype(mask_dtype))
+            pos += n
+            vpos += k
+        if vpos != nnz:
+            raise ValueError(
+                f"frame carries {nnz} values, schema holds {vpos}")
+        return (jax.tree.unflatten(spec.treedef, params),
+                jax.tree.unflatten(spec.treedef, masks))

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gossip import _intersection_avg
+from repro.obs import CounterSet
 from repro.sparse.packed import (
     PackedSparse,
     _unpack_bits,
@@ -52,6 +53,12 @@ PyTree = Any
 #: accumulate instrumentation: calls == payload-leaf folds performed,
 #: values == nnz actually touched (reset with ``reset_counters``)
 COUNTERS = {"accum_calls": 0, "accum_values": 0}
+
+# mirror the dict into the process-wide registry (dict stays the API the
+# scaling tests use; the gauges read it live, so snapshots never drift)
+OBS = CounterSet("sparse.ops")
+OBS.gauge("accum_calls", fn=lambda: COUNTERS["accum_calls"])
+OBS.gauge("accum_values", fn=lambda: COUNTERS["accum_values"])
 
 
 def reset_counters() -> None:

@@ -27,9 +27,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import CounterSet, span
+
 PyTree = Any
 
 BITS_PER_WORD = 32
+
+# message-boundary observability (pack/unpack happen per gossip payload)
+OBS = CounterSet("sparse.packed")
+_C_PACKS = OBS.counter("tree_packs")
+_C_UNPACKS = OBS.counter("tree_unpacks")
 
 
 def n_words(n_coords: int) -> int:
@@ -131,14 +138,18 @@ def _is_packed(x) -> bool:
 def pack_tree(params: PyTree, masks: Optional[PyTree] = None,
               dtype=None) -> PyTree:
     """Pack every leaf of a parameter pytree (``masks=None`` -> dense)."""
-    if masks is None:
-        return jax.tree.map(lambda w: pack(w, None, dtype), params)
-    return jax.tree.map(lambda w, m: pack(w, m, dtype), params, masks)
+    with span("codec.pack_tree", track="codec"):
+        _C_PACKS.inc()
+        if masks is None:
+            return jax.tree.map(lambda w: pack(w, None, dtype), params)
+        return jax.tree.map(lambda w, m: pack(w, m, dtype), params, masks)
 
 
 def unpack_tree(packed: PyTree) -> PyTree:
     """Dense parameter pytree from a packed one."""
-    return jax.tree.map(unpack, packed, is_leaf=_is_packed)
+    with span("codec.unpack_tree", track="codec"):
+        _C_UNPACKS.inc()
+        return jax.tree.map(unpack, packed, is_leaf=_is_packed)
 
 
 def unpack_mask_tree(packed: PyTree, dtype=jnp.float32) -> PyTree:

@@ -1,0 +1,488 @@
+"""repro.obs: span recording semantics, counter registry, Perfetto export
+validity/determinism, engine instrumentation (sim virtual spans reconciling
+bit-for-bit with LinkStats, the ScaleEngine recompile guard, store/serve
+counters), the MetricsStream fixes, and the --trace CLI smokes."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, make_cnn_task, make_strategy
+from repro.obs import (
+    Counter,
+    CounterSet,
+    Gauge,
+    Tracer,
+    VIRTUAL,
+    WALL,
+    phase_summary,
+    set_tracer,
+    snapshot_counters,
+    span,
+    to_trace_events,
+    validate_trace,
+    write_trace,
+)
+from repro.obs.trace import _NULL
+
+pytestmark = pytest.mark.tier1
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture()
+def tracer():
+    """A private enabled tracer installed as the process default, so no
+    test leaks spans into (or out of) the shared tracer."""
+    t = Tracer()
+    old = set_tracer(t)
+    t.enable(mode="full")
+    yield t
+    set_tracer(old)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    clients, _ = build_federated_image_task(
+        0, n_clients=4, partition="pathological", classes_per_client=2,
+        n_train_per_class=24, n_test_per_client=16, hw=8, noise=0.7)
+    task = make_cnn_task("smallcnn", 10, 8, width=4)
+    cfg = FLConfig(n_clients=4, rounds=3, local_epochs=2, batch_size=16,
+                   degree=2, eval_every=1)
+    return task, clients, cfg
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_records_both_and_attrs_mutable(tracer):
+    with span("outer", track="t", a=1) as outer:
+        with span("inner", track="t"):
+            time.sleep(0.001)
+        outer.attrs["b"] = 2          # annotate a result computed inside
+    spans = tracer.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]   # close order
+    inner, outer = spans
+    assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1   # nesting
+    assert outer.attrs == {"a": 1, "b": 2}
+    assert all(s.dur >= 0 and s.clock == WALL for s in spans)
+    assert [s.seq for s in spans] == [0, 1]
+
+
+def test_disabled_tracer_is_shared_noop():
+    t = Tracer()
+    old = set_tracer(t)
+    try:
+        assert span("a") is span("b") is _NULL    # no per-call allocation
+        with span("x", track="y") as s:
+            s.attrs["k"] = 1                      # annotating is safe
+        t.add_span("v", 0.0, 1.0)
+        assert len(t) == 0
+    finally:
+        set_tracer(old)
+
+
+def test_ring_mode_drops_full_mode_keeps():
+    t = Tracer()
+    t.enable(mode="ring", capacity=4)
+    for i in range(10):
+        t.add_span("s", i, i + 1)
+    assert len(t) == 4 and t.dropped == 6
+    assert [s.t0 for s in t.spans()] == [6.0, 7.0, 8.0, 9.0]
+    t.enable(mode="full")
+    for i in range(10):
+        t.add_span("s", i, i + 1)
+    assert len(t) == 10 and t.dropped == 0
+
+
+def test_begin_end_open_spans_and_end_all(tracer):
+    h = tracer.begin("resident", track="slot/0", clock=VIRTUAL, t=1.0)
+    tracer.end(h, t=3.0, user=7)
+    assert tracer.end(None) is None               # disabled-mode handle
+    h2 = tracer.begin("resident", track="slot/1", clock=VIRTUAL, t=5.0)
+    assert tracer.end_all(t=9.0) == 1
+    tracer.end(h2, t=11.0)                        # already closed: no dup
+    spans = tracer.spans(clock=VIRTUAL)
+    assert [(s.t0, s.t1) for s in spans] == [(1.0, 3.0), (5.0, 9.0)]
+    assert spans[0].attrs == {"user": 7}
+
+
+def test_phase_summary_aggregates(tracer):
+    tracer.add_span("a", 0.0, 1.0, track="x")
+    tracer.add_span("a", 0.0, 3.0, track="x")
+    tracer.add_span("b", 0.0, 2.0, track="y")
+    agg = phase_summary(tracer)
+    assert agg["a"] == {"count": 2, "total_s": 4.0, "max_s": 3.0,
+                        "mean_s": 2.0}
+    assert phase_summary(tracer, track="x").keys() == {"a"}
+
+
+# ---------------------------------------------------------------------------
+# counters
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotonic_and_gauge_fn():
+    cs = CounterSet("test.ns1")
+    c = cs.counter("n")
+    c.inc()
+    c.inc(4)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 5
+    box = {"v": 0.0}
+    cs.gauge("g", fn=lambda: box["v"])
+    box["v"] = 2.5
+    snap = snapshot_counters("test.ns1")
+    assert snap == {"test.ns1/n": 5, "test.ns1/g": 2.5}
+    assert cs.counter("n") is c                   # create-or-return
+    with pytest.raises(TypeError):
+        cs.gauge("n")                             # name already a counter
+    cs.reset()
+    assert cs.counter("n").value == 0
+
+
+def test_registry_sums_and_forgets_dead_sets():
+    import gc
+
+    a = CounterSet("test.ns2")
+    b = CounterSet("test.ns2")
+    a.counter("k").inc(2)
+    b.counter("k").inc(3)
+    assert snapshot_counters("test.ns2") == {"test.ns2/k": 5}
+    del b
+    gc.collect()                                  # WeakSet registry
+    assert snapshot_counters("test.ns2") == {"test.ns2/k": 2}
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+
+def test_export_schema_and_deterministic_tids(tracer, tmp_path):
+    with span("w", track="zeta"):
+        pass
+    tracer.add_span("v", 1.0, 2.0, track="link/1->0", n=3)
+    tracer.add_span("v", 0.5, 2.5, track="client/2")
+    h = tracer.begin("open", track="client/2", clock=VIRTUAL, t=1.0)
+    del h                                          # closed by export
+    doc = write_trace(str(tmp_path / "t.json"))
+    with open(tmp_path / "t.json") as f:
+        assert json.load(f) == doc
+    assert validate_trace(doc) == []
+    other = doc["otherData"]
+    assert other["traceSchemaVersion"] == 1
+    assert other["jsonlSchemaVersion"] == 1
+    assert other["spans"] == 4 and other["droppedSpans"] == 0
+    assert isinstance(other["counters"], dict)
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    # one pid per clock domain; tids assigned by sorted track name
+    assert {e["pid"] for e in xs if e["cat"] == "wall"} == {1}
+    assert {e["pid"] for e in xs if e["cat"] == "virtual"} == {2}
+    virt = {e["name"]: e["tid"] for e in xs if e["cat"] == "virtual"}
+    # sorted virtual tracks: client/2 < link/1->0  -> tids 1, 2
+    assert virt["open"] == 1 and virt["v"] in (1, 2)
+    names = {e["args"]["name"]
+             for e in doc["traceEvents"] if e["name"] == "thread_name"}
+    assert names == {"zeta", "client/2", "link/1->0"}
+
+
+def test_validate_trace_catches_breakage():
+    assert validate_trace({}) == ["traceEvents missing or not a list"]
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0, "dur": -1},
+        {"ph": "Q", "name": "b", "pid": 1},
+    ]}
+    problems = validate_trace(bad)
+    assert any("negative dur" in p for p in problems)
+    assert any("unsupported ph" in p for p in problems)
+
+
+# ---------------------------------------------------------------------------
+# engine + sim instrumentation
+# ---------------------------------------------------------------------------
+
+
+def test_sim_sync_virtual_spans_match_linkstats_bitforbit(tracer, setup):
+    from repro.sim import LossModel, SimEngine
+
+    task, clients, cfg = setup
+    sim = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                    local_exec="loop", mode="sync", uplink="fifo",
+                    loss=LossModel(0.3, timeout_s=0.05, seed=0))
+    sim.run()
+    recorded = {(s.name, s.t0, s.t1, s.attrs["src"], s.attrs["dst"],
+                 s.attrs["bytes_values"], s.attrs["bytes_wire"])
+                for s in tracer.spans(clock=VIRTUAL)
+                if s.name in ("transfer", "retransmit")}
+    expected = {("retransmit" if tr.attempt else "transfer",
+                 tr.t_start, tr.t_end, tr.src, tr.dst,
+                 tr.bytes_values, tr.bytes_wire)
+                for tr in sim.stats.transfers}
+    assert recorded == expected                   # identical floats
+    assert any(n == "retransmit" for n, *_ in recorded)
+    # fifo discipline also emits uplink-residency spans
+    assert tracer.spans(clock=VIRTUAL, track="uplink/0")
+    # counters mirror the same accumulators the spans were stamped from
+    snap = snapshot_counters("sim.links")
+    assert snap["sim.links/transfers"] == len(sim.stats.transfers)
+    assert snap["sim.links/bytes_wire"] == float(sim.stats.up_wire.sum())
+    # the host-side engine phases landed on the wall clock
+    agg = phase_summary(tracer, clock=WALL, track="engine")
+    assert agg["round.mix"]["count"] == cfg.rounds
+    assert agg["round.local"]["count"] == cfg.rounds
+
+
+def test_sim_async_compute_and_wait_spans(tracer, setup):
+    from repro.sim import SimEngine
+
+    task, clients, cfg = setup
+    sim = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                    mode="async", staleness=0, round_s=1.0,
+                    compute_speeds=np.array([0.2, 1.0, 1.0, 1.0]))
+    sim.run()
+    compute = [s for s in tracer.spans(clock=VIRTUAL) if s.name == "compute"]
+    waits = [s for s in tracer.spans(clock=VIRTUAL) if s.name == "ssp.wait"]
+    assert len(compute) == cfg.rounds * cfg.n_clients
+    assert {s.track for s in compute} == {
+        f"client/{k}" for k in range(cfg.n_clients)}
+    # staleness=0 with a 5x-faster client 0 must gate it at least once
+    assert waits and all(s.t1 >= s.t0 for s in waits)
+    # every wait closed within the simulated horizon
+    assert all(s.t1 <= sim.clock.now for s in waits)
+
+
+def test_scale_engine_recompile_guard(setup):
+    from repro.scale import ScaleEngine
+
+    task, clients, cfg = setup
+    # the annealing strategy sweeps lr AND prune-rate scalars every round —
+    # exactly the traced-scalar path that must never retrigger a compile
+    eng = ScaleEngine(make_strategy("dispfl_anneal"), task, clients, cfg)
+    eng.run()
+    assert eng.step_compiles == 1
+    snap = snapshot_counters("scale.engine")
+    assert snap["scale.engine/step_calls"] >= cfg.rounds
+    assert snapshot_counters("jax")["jax/backend_compiles"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# serve instrumentation
+# ---------------------------------------------------------------------------
+
+
+def _mlp_store(n_users=6, density=0.5, cache_size=4, seed=0):
+    from repro.core.masks import apply_mask, init_mask
+    from repro.serve import MLPModel, ModelStore
+
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    base = model.init(jax.random.PRNGKey(seed))
+    store = ModelStore(base, cache_size=cache_size)
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), 2 * n_users)
+    for u in range(n_users):
+        p = model.init(keys[2 * u])
+        store.put(u, apply_mask(p, init_mask(keys[2 * u + 1], p, density)),
+                  init_mask(keys[2 * u + 1], p, density))
+    return store, model
+
+
+def test_store_counters_and_residency_spans(tracer):
+    store, _ = _mlp_store(n_users=6, cache_size=2)
+    for u in (0, 1, 0, 2, 0):      # miss, miss, hit, miss+evict, hit
+        store.acquire(u)
+    assert (store.hits, store.misses) == (2, 3)
+    assert store.evictions >= 1
+    decodes = [s for s in tracer.spans() if s.name == "store.miss_decode"]
+    assert len(decodes) == 3
+    assert all(s.attrs["nbytes"] > 0 for s in decodes)
+    tracer.end_all()
+    resident = [s for s in tracer.spans() if s.name.startswith("user:")]
+    assert len(resident) == 3                     # one per miss
+    assert all(s.track.startswith("slot/") for s in resident)
+    store.reset_counters()
+    assert (store.hits, store.misses, store.evictions) == (0, 0, 0)
+
+
+def test_serve_engine_component_spans_and_summary(tracer):
+    from repro.serve import RequestStream, ServeEngine
+
+    store, model = _mlp_store(n_users=6, cache_size=4)
+    eng = ServeEngine(store, model, backend="vmap", max_batch=4,
+                      max_wait=0.01)
+    res = eng.serve(RequestStream(n_users=6, n_requests=24, seed=0,
+                                  rate=500.0))
+    s = res.summary
+    n_batches = s["batches"]
+    for phase in ("serve.launch", "serve.acquire", "serve.scatter",
+                  "serve.forward"):
+        assert phase_summary(tracer, clock=WALL)[phase]["count"] == n_batches
+    waits = tracer.spans(clock=VIRTUAL)
+    assert sum(1 for w in waits if w.name == "request.wait") == 24
+    # honest latency components: wait + service decompose the percentile
+    for key in ("p50_wait_ms", "p99_wait_ms", "p50_service_ms",
+                "p99_service_ms"):
+        assert key in s
+    assert s["p50_ms"] >= s["p50_wait_ms"]
+
+
+# ---------------------------------------------------------------------------
+# MetricsStream fixes
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_stream_append_resumes_without_clobber(tmp_path):
+    from repro.sim.report import MetricsStream
+
+    path = str(tmp_path / "m.jsonl")
+    with MetricsStream(path) as ms:
+        ms.emit({"event": "a"})
+    with MetricsStream(path, append=True) as ms:
+        ms.emit({"event": "b"})
+    events = [json.loads(l)["event"] for l in open(path)]
+    assert events == ["a", "b"]
+    with MetricsStream(path) as ms:               # mode "w": fresh run
+        ms.emit({"event": "c"})
+    assert [json.loads(l)["event"] for l in open(path)] == ["c"]
+
+
+def test_metrics_stream_never_closes_stdout(capsys):
+    from repro.sim.report import MetricsStream
+
+    ms = MetricsStream("-")
+    ms.emit({"event": "x"})
+    ms.close()
+    ms.close()                                    # idempotent
+    assert not sys.stdout.closed
+    print("still alive")
+    out = capsys.readouterr().out
+    assert '"event": "x"' in out and "still alive" in out
+
+
+def test_metrics_stream_schema_header(tmp_path):
+    from repro.sim.report import MetricsStream
+
+    path = str(tmp_path / "h.jsonl")
+    with MetricsStream(path, header=True) as ms:
+        ms.emit({"event": "a"})
+        ms.emit({"event": "b"})
+    recs = [json.loads(l) for l in open(path)]
+    assert recs[0] == {"event": "schema", "version": 1}
+    assert [r["event"] for r in recs[1:]] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# codec counters + roofline measured rows
+# ---------------------------------------------------------------------------
+
+
+def test_codec_counters_and_spans(tracer):
+    from repro.core.masks import init_mask
+    from repro.serve import MLPModel
+    from repro.sparse import TreeSpec, decode, encode, pack_tree
+
+    model = MLPModel(d_in=16, widths=(32,), n_out=8)
+    p = model.init(jax.random.PRNGKey(0))
+    m = init_mask(jax.random.PRNGKey(1), p, 0.5)
+    before = snapshot_counters("sparse.codec")
+    frame = encode(pack_tree(p, m))
+    decode(frame, TreeSpec.from_tree(p))
+    after = snapshot_counters("sparse.codec")
+    assert after["sparse.codec/encodes"] == before.get(
+        "sparse.codec/encodes", 0) + 1
+    assert after["sparse.codec/bytes_out"] - before.get(
+        "sparse.codec/bytes_out", 0) == len(frame)
+    assert after["sparse.codec/bytes_in"] - before.get(
+        "sparse.codec/bytes_in", 0) == len(frame)
+    names = {s.name for s in tracer.spans(track="codec")}
+    assert {"codec.pack_tree", "codec.encode", "codec.decode"} <= names
+
+
+def test_measured_phase_rows_prices_analytic_cost():
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS, measured_phase_rows
+
+    summary = {"round.local": {"count": 2, "total_s": 4.0, "mean_s": 2.0,
+                               "max_s": 3.0},
+               "round.mix": {"count": 2, "total_s": 1.0, "mean_s": 0.5,
+                             "max_s": 0.6}}
+    rows = measured_phase_rows(summary, {"round.local": (PEAK_FLOPS, "flops"),
+                                         "round.mix": (HBM_BW, "bytes")})
+    by = {r["phase"]: r for r in rows}
+    assert by["round.local"]["predicted_ms_per_call"] == 1000.0
+    assert by["round.local"]["achieved_per_s"] == PEAK_FLOPS / 2.0
+    assert by["round.mix"]["predicted_ms_per_call"] == 1000.0
+    assert by["round.mix"]["observed_ms_per_call"] == 500.0
+    with pytest.raises(ValueError):
+        measured_phase_rows(summary, {"round.mix": (1.0, "pixels")})
+
+
+# ---------------------------------------------------------------------------
+# CLI smokes: --trace artifacts reconcile with the counters inside them
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(args, cwd):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-m"] + args, cwd=cwd,
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+
+
+@pytest.mark.slow
+def test_train_sim_trace_cli_reconciles(tmp_path):
+    trace = str(tmp_path / "sim_trace.json")
+    r = _run_cli(["repro.launch.train", "simulate", "--sim",
+                  "--clients", "4", "--rounds", "2", "--local-epochs", "1",
+                  "--batch-size", "16", "--samples-per-class", "20",
+                  "--hw", "8", "--width", "4", "--degree", "2",
+                  "--eval-every", "2", "--exec", "loop",
+                  "--loss-prob", "0.3", "--retransmit-timeout", "0.05",
+                  "--uplink-mode", "fifo",
+                  "--trace", trace, "--trace-mode", "full"], REPO)
+    assert r.returncode == 0, r.stderr[-2000:]
+    with open(trace) as f:
+        doc = json.load(f)
+    assert validate_trace(doc) == []
+    counters = doc["otherData"]["counters"]
+    xfers = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] in ("transfer", "retransmit")]
+    assert counters["sim.links/transfers"] == len(xfers)
+    assert counters["sim.links/bytes_wire"] == sum(
+        e["args"]["bytes_wire"] for e in xfers)
+    assert counters["sim.links/n_retransmits"] == sum(
+        1 for e in xfers if e["name"] == "retransmit")
+
+
+@pytest.mark.slow
+def test_serve_trace_cli_reconciles(tmp_path):
+    trace = str(tmp_path / "serve_trace.json")
+    metrics = str(tmp_path / "serve.jsonl")
+    r = _run_cli(["repro.launch.serve", "--users", "8", "--cache-size", "4",
+                  "--max-batch", "4", "--requests", "32", "--model", "mlp",
+                  "--metrics-jsonl", metrics,
+                  "--trace", trace, "--trace-mode", "full"], REPO)
+    assert r.returncode == 0, r.stderr[-2000:]
+    with open(trace) as f:
+        doc = json.load(f)
+    assert validate_trace(doc) == []
+    counters = doc["otherData"]["counters"]
+    # every request acquires a slot exactly once
+    assert (counters["serve.store/hits"]
+            + counters["serve.store/misses"]) == 32
+    waits = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] == "request.wait"]
+    assert len(waits) == 32
+    summary = [json.loads(l) for l in open(metrics)][-1]
+    assert summary["event"] == "summary"
+    assert summary["store_hits"] == counters["serve.store/hits"]
+    launches = [e for e in doc["traceEvents"]
+                if e["ph"] == "X" and e["name"] == "serve.launch"]
+    assert len(launches) == summary["batches"]
