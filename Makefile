@@ -15,13 +15,17 @@
 #                      vs benchmarks/baselines/*.json (CI full job; refresh
 #                      deliberately with `python -m benchmarks.check_regression
 #                      --update`)
+#   make obs-smoke   - observability smoke: a traced sim run writes a run
+#                      archive, the dashboard renders from it, and --check
+#                      reconciles the page's rollups against the archived
+#                      counters exactly
 
 PY := PYTHONPATH=src python
 
 .PHONY: verify test tier1 smoke sim-smoke scale-smoke codec-smoke \
-	serve-smoke bench-gate
+	serve-smoke bench-gate obs-smoke
 
-verify: test smoke sim-smoke scale-smoke codec-smoke serve-smoke
+verify: test smoke sim-smoke scale-smoke codec-smoke serve-smoke obs-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -53,4 +57,13 @@ serve-smoke:
 	    --requests 64 --backend ref --model mlp --density 0.3
 
 bench-gate:
-	$(PY) -m benchmarks.check_regression --out BENCH_latest.json
+	$(PY) -m benchmarks.check_regression --out BENCH_latest.json --attribute
+
+obs-smoke:
+	rm -rf /tmp/repro_obs_smoke
+	$(PY) -m repro.launch.train simulate --sim --strategy dispfl_anneal \
+	    --rounds 2 --clients 4 --local-epochs 1 --samples-per-class 20 \
+	    --eval-every 2 --loss-prob 0.1 --uplink-mode fair \
+	    --run-dir /tmp/repro_obs_smoke/run --trace-mode full
+	$(PY) -m repro.launch.dash render --run-dir /tmp/repro_obs_smoke/run \
+	    -o /tmp/repro_obs_smoke/dash.html --check

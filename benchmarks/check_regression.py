@@ -184,6 +184,34 @@ def compare(module: str, rows: list[dict]) -> list[str]:
     return failures
 
 
+def _attribute(history_path: str) -> None:
+    """On gate failure, name the dominant phase/counter deltas between
+    this run (just appended to history) and the previous one — the
+    difference between "trace_overhead_ratio is over the ceiling" and
+    "round.local got 2.1x slower and jax recompiled 14 more times"."""
+    from repro.obs import diff_runs, read_history
+    runs = read_history(history_path, event="run")
+    if len(runs) < 2:
+        print("# --attribute: no previous run in history to diff against",
+              file=sys.stderr)
+        return
+    old, new = runs[-2], runs[-1]
+    d = diff_runs(old, new)
+    print(f"# ATTRIBUTION vs {old.get('git_sha', '?')} "
+          f"@ {old.get('iso', '?')}:", file=sys.stderr)
+    for p in d["phases"]:
+        ratio = ("inf" if p["old_s"] == 0 else f"{p['ratio']:.2f}x")
+        print(f"#   phase {p['phase']}: {p['old_s']:.4f}s -> "
+              f"{p['new_s']:.4f}s ({p['delta_s']:+.4f}s, {ratio})",
+              file=sys.stderr)
+    for c in d["counters"]:
+        print(f"#   counter {c['counter']}: {c['old']:g} -> {c['new']:g} "
+              f"({c['delta']:+g}, {c['rel']:.1%})", file=sys.stderr)
+    if not d["phases"] and not d["counters"]:
+        print("#   no phase/counter deltas between the two runs",
+              file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--update", action="store_true",
@@ -195,6 +223,14 @@ def main() -> None:
     ap.add_argument("--trace", default="BENCH_trace.json",
                     help="export a Perfetto trace of the gated run here "
                          "('': disable)")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="append this run (per-module rows + a run line "
+                         "with phase_summary and counters) to this "
+                         "append-only JSONL ('': disable)")
+    ap.add_argument("--attribute", action="store_true",
+                    help="on rule failure, diff this run against the "
+                         "previous history run line and name the top "
+                         "phase/counter deltas")
     args = ap.parse_args()
     only = [m.strip() for m in args.only.split(",") if m.strip()]
 
@@ -213,6 +249,14 @@ def main() -> None:
         doc = write_trace(args.trace)
         print(f"# wrote trace ({doc['otherData']['spans']} spans) "
               f"to {args.trace}")
+    if args.history:
+        from repro.obs import append_history, phase_summary, snapshot_counters
+        n = append_history(
+            args.history, results,
+            phase_summary_doc=phase_summary() if args.trace else None,
+            counters=snapshot_counters(),
+            note="update" if args.update else "gate")
+        print(f"# appended {n} lines to {args.history}")
 
     if args.update:
         os.makedirs(BASELINE_DIR, exist_ok=True)
@@ -232,6 +276,8 @@ def main() -> None:
         print(f"# BENCH GATE: {len(failures)} violation(s)", file=sys.stderr)
         for msg in failures:
             print(f"#   {msg}", file=sys.stderr)
+        if args.attribute and args.history:
+            _attribute(args.history)
         raise SystemExit(1)
     n = sum(len(r) for r in results.values())
     print(f"# bench gate OK: {n} rows within tolerance of baselines")

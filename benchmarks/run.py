@@ -43,6 +43,11 @@ def main() -> None:
     ap.add_argument("--trace", default="",
                     help="export a Perfetto trace_event JSON of the whole "
                          "benchmark run (repro.obs) to this path")
+    ap.add_argument("--history", default="",
+                    help="append timestamped, git-sha-stamped rows per "
+                         "module to this JSONL (the append-only perf "
+                         "trajectory; BENCH_latest.json only holds the "
+                         "newest run)")
     args = ap.parse_args()
     only = [m.strip() for m in args.only.split(",") if m.strip()]
 
@@ -51,13 +56,16 @@ def main() -> None:
         get_tracer().enable(mode="ring", capacity=1 << 18)
 
     rows = []
+    by_module: dict[str, list] = {}
     failed = []
     for name in MODULES:
         if only and name not in only:
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            rows.extend(mod.run(fast=not args.full))
+            mod_rows = mod.run(fast=not args.full)
+            rows.extend(mod_rows)
+            by_module[name] = mod_rows
         except Exception:
             traceback.print_exc()
             failed.append(name)
@@ -68,6 +76,14 @@ def main() -> None:
         doc = write_trace(args.trace)
         print(f"# wrote trace ({doc['otherData']['spans']} spans) to "
               f"{args.trace}", file=sys.stderr)
+    if args.history:
+        from repro.obs import append_history, phase_summary, snapshot_counters
+        n = append_history(
+            args.history, by_module,
+            phase_summary_doc=phase_summary() if args.trace else None,
+            counters=snapshot_counters(),
+            note="full" if args.full else "fast")
+        print(f"# appended {n} lines to {args.history}", file=sys.stderr)
     if failed:
         print(f"# FAILED modules: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -59,7 +59,7 @@ from repro.fl.base import (
     rounds_to_targets,
 )
 from repro.models.common import softmax_xent
-from repro.obs import CounterSet, span
+from repro.obs import CounterSet, SeriesSet, span
 from repro.optim import SGDConfig, masked_sgd_step, sgd_step
 from repro.sparse import pack_tree, unpack_mask_tree, unpack_tree
 from repro.utils.tree import tree_index, tree_nnz, tree_size, tree_stack
@@ -179,6 +179,31 @@ class StrategyBase:
 
     def round_flops(self, state: dict, ctx: RoundCtx) -> FlopsReport:
         raise NotImplementedError
+
+    # -- density telemetry (obs layer 2: measured vs scheduled sparsity) ---
+    def measured_density(self, state: dict) -> Optional[float]:
+        """Fleet-mean *measured* mask density (nnz / size over every
+        client's mask), or None for strategies without masks."""
+        masks = state.get("masks") if isinstance(state, dict) else None
+        if not masks or masks[0] is None:
+            return None
+        nnz = sum(tree_nnz(m) for m in masks)
+        size = sum(tree_size(m) for m in masks)
+        return float(nnz) / float(size) if size else None
+
+    def target_density(self, t: int) -> Optional[float]:
+        """Fleet-mean *scheduled* density at round ``t``: the anneal
+        schedule when the strategy has one (``density_at``), the static
+        per-client config densities otherwise.  The gap between this and
+        ``measured_density`` is the drift ``repro.obs.health`` watches."""
+        cfg = getattr(self, "cfg", None)
+        if cfg is None:
+            return None
+        if hasattr(self, "density_at"):
+            return float(np.mean([self.density_at(t, k)
+                                  for k in range(cfg.n_clients)]))
+        return float(np.mean([cfg.client_density(k)
+                              for k in range(cfg.n_clients)]))
 
     # -- vmap fast-path adapters ------------------------------------------
     def local_epochs(self, state: dict, ctx: RoundCtx) -> int:
@@ -459,6 +484,11 @@ class RoundEngine:
             np.sum(self._flops["per_round_flops"])))
         self.obs.gauge("comm_total_mb", fn=lambda: float(
             np.sum(self._comm["total_mb"])))
+        # obs layer 2: per-round wall-clock time series (not checkpointed —
+        # a resumed run restarts its series; the counters above stay the
+        # reconciliation source of truth)
+        self.series = SeriesSet("fl.engine")
+        self._series_epoch = time.perf_counter()
 
     # -- control -----------------------------------------------------------
     def request_stop(self) -> None:
@@ -530,6 +560,26 @@ class RoundEngine:
         """Last chance to decorate the round's metrics before callbacks."""
         return metrics
 
+    def _sample_series(self, metrics: RoundMetrics) -> None:
+        """Sample the wall-clock engine series after one round.  Counter-kind
+        series record the *cumulative* accumulator values, so their
+        telescoping delta sums reconcile exactly with the ``fl.engine``
+        gauges in ``snapshot_counters()``."""
+        tw = time.perf_counter() - self._series_epoch
+        ss = self.series
+        ss.series("round_wall_s").observe(tw, metrics.wall_s)
+        ss.series("comm_total_mb", kind="counter").observe(
+            tw, float(np.sum(self._comm["total_mb"])))
+        ss.series("cum_flops", kind="counter").observe(tw, metrics.cum_flops)
+        if metrics.acc_mean is not None:
+            ss.series("acc_mean").observe(tw, metrics.acc_mean)
+        dm = self.strategy.measured_density(self.state)
+        if dm is not None:
+            ss.series("density_measured").observe(tw, dm)
+            dt_ = self.strategy.target_density(metrics.round)
+            if dt_ is not None:
+                ss.series("density_target").observe(tw, dt_)
+
     def run_local_phase(self, ctx: RoundCtx, active: Sequence[int]) -> None:
         """Execute the local phase for ``active`` clients — the reusable unit
         the simulator invokes per client (``active=[k]``) or per round."""
@@ -584,7 +634,9 @@ class RoundEngine:
             cum_flops=float(np.sum(self._flops["per_round_flops"])),
             acc_mean=acc_mean, acc_std=acc_std,
             wall_s=time.perf_counter() - t0)
-        return self._finish_metrics(ctx, metrics)
+        metrics = self._finish_metrics(ctx, metrics)
+        self._sample_series(metrics)
+        return metrics
 
     def rounds(self) -> Iterator[RoundMetrics]:
         for t in range(self._next_round, self.cfg.rounds):

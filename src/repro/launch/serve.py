@@ -86,15 +86,19 @@ def main() -> None:
                     choices=["ring", "full"],
                     help="span recorder: ring = bounded buffer (default), "
                          "full = keep every span")
+    ap.add_argument("--run-dir", default="", dest="run_dir",
+                    help="write a run archive (manifest, counters, series, "
+                         "trace, health events) to this directory; implies "
+                         "tracing.  Render with repro.launch.dash")
     args = ap.parse_args()
-    if args.trace_mode is not None and not args.trace:
-        ap.error("--trace-mode requires --trace")
+    if args.trace_mode is not None and not (args.trace or args.run_dir):
+        ap.error("--trace-mode requires --trace or --run-dir")
 
     from repro.serve.batcher import RequestStream
     from repro.serve.engine import ServeEngine
     from repro.sim.report import MetricsStream
 
-    if args.trace:
+    if args.trace or args.run_dir:
         from repro.obs import get_tracer
         get_tracer().enable(mode=args.trace_mode or "ring")
 
@@ -110,12 +114,40 @@ def main() -> None:
                              metrics=stream, metrics_every=args.metrics_every)
         requests = RequestStream(n_users=n_users, n_requests=args.requests,
                                  seed=args.seed, rate=args.rate)
-        engine.serve(requests)
+        result = engine.serve(requests)
     if args.trace:
         from repro.obs import write_trace
         doc = write_trace(args.trace)
         print(f"wrote trace ({doc['otherData']['spans']} spans) to "
               f"{args.trace} — open at https://ui.perfetto.dev")
+    if args.run_dir:
+        import os
+
+        from repro.obs import (
+            RunManifest,
+            emit_health,
+            fleet_health,
+            get_tracer,
+            save_run,
+            snapshot_counters,
+        )
+
+        config = {k: v for k, v in vars(args).items()
+                  if isinstance(v, (int, float, str, bool, type(None)))}
+        manifest = RunManifest.build("serve", seed=args.seed, config=config)
+        tracer = get_tracer()
+        save_run(args.run_dir, manifest,
+                 tracer=tracer if tracer.enabled else None,
+                 report=result.summary)
+        _, events = fleet_health(tracer, counters=snapshot_counters(),
+                                 dropped_spans=tracer.dropped)
+        with MetricsStream(os.path.join(args.run_dir, "health.jsonl"),
+                           header=True) as hs:
+            emit_health(hs, events)
+        for ev in events:
+            print(f"[health] {ev.severity}: {ev.kind} — {ev.message}")
+        print(f"saved run archive {manifest.run_id} to {args.run_dir} "
+              f"({len(events)} health events)")
 
 
 if __name__ == "__main__":

@@ -134,7 +134,9 @@ def run_simulate(args) -> dict:
     if args.resume:
         engine.restore(args.resume)
         print(f"resumed from {args.resume} at round {engine._next_round}")
-    if args.trace:
+    if args.trace or args.run_dir:
+        # --run-dir implies tracing: the archive's rollups/dashboard are
+        # derived from spans, so an archive without them is near-empty
         from repro.obs import get_tracer
         get_tracer().enable(mode=args.trace_mode or "ring")
 
@@ -163,11 +165,54 @@ def run_simulate(args) -> dict:
         doc = write_trace(args.trace)
         print(f"wrote trace ({doc['otherData']['spans']} spans) to "
               f"{args.trace} — open at https://ui.perfetto.dev")
+    if args.run_dir:
+        _save_run_archive(args, engine, out)
     if args.save:
         save_clients(args.save, [{"final_acc": np.asarray(a)}
                                  for a in res.final_accs])
         print(f"saved per-client results to {args.save}")
     return out
+
+
+def _save_run_archive(args, engine, out: dict) -> None:
+    """Write the run archive (manifest + counters + series + trace) and
+    stream fleet-health events to ``<run_dir>/health.jsonl`` — the layout
+    ``repro.launch.dash`` renders and ``RunRegistry`` lists."""
+    import os
+
+    from repro.obs import (
+        RunManifest,
+        fleet_health,
+        get_tracer,
+        save_run,
+    )
+    from repro.sim.report import MetricsStream
+
+    kind = "scale" if args.scale else ("sim" if args.sim else "train")
+    config = {k: v for k, v in vars(args).items()
+              if isinstance(v, (int, float, str, bool, type(None)))}
+    manifest = RunManifest.build(kind, seed=args.seed, config=config)
+    tracer = get_tracer()
+    save_run(args.run_dir, manifest,
+             tracer=tracer if tracer.enabled else None, report=out)
+
+    density = None
+    dm = engine.series.series("density_measured")
+    dt = engine.series.series("density_target")
+    if dm.points() and dt.points():
+        density = (dm, dt)
+    from repro.obs import snapshot_counters
+    _, events = fleet_health(
+        tracer, counters=snapshot_counters(), density=density,
+        dropped_spans=tracer.dropped)
+    with MetricsStream(os.path.join(args.run_dir, "health.jsonl"),
+                       header=True) as stream:
+        from repro.obs import emit_health
+        emit_health(stream, events)
+    for ev in events:
+        print(f"[health] {ev.severity}: {ev.kind} — {ev.message}")
+    print(f"saved run archive {manifest.run_id} to {args.run_dir} "
+          f"({len(events)} health events)")
 
 
 def run_lm(args) -> dict:
@@ -311,6 +356,10 @@ def main() -> None:
                      choices=["ring", "full"],
                      help="span recorder: ring = bounded buffer (default), "
                           "full = keep every span")
+    sim.add_argument("--run-dir", default="", dest="run_dir",
+                     help="write a run archive (manifest, counters, series, "
+                          "trace, health events) to this directory; implies "
+                          "tracing.  Render with repro.launch.dash")
     # client-sharded SPMD execution (repro.scale)
     sim.add_argument("--scale", action="store_true",
                      help="run through ScaleEngine: the whole round "
@@ -393,8 +442,8 @@ def main() -> None:
     if args.mode == "simulate":
         if args.scale and args.sim:
             ap.error("--scale and --sim are mutually exclusive engines")
-        if args.trace_mode is not None and not args.trace:
-            ap.error("--trace-mode requires --trace")
+        if args.trace_mode is not None and not (args.trace or args.run_dir):
+            ap.error("--trace-mode requires --trace or --run-dir")
         if not args.scale:
             scale_only = {"--mesh-shape": bool(args.mesh_shape),
                           "--scale-reduction":

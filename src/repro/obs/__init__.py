@@ -26,9 +26,40 @@ from repro.obs.export import (
     JSONL_SCHEMA_VERSION,
     TRACE_SCHEMA_VERSION,
     phase_summary,
+    spans_from_trace_doc,
     to_trace_events,
     validate_trace,
     write_trace,
+)
+from repro.obs.health import (
+    HealthEvent,
+    HealthThresholds,
+    comm_rollup,
+    density_drift,
+    emit_health,
+    fleet_health,
+    staleness_rollup,
+    store_rollup,
+    straggler_rollup,
+    uplink_rollup,
+)
+from repro.obs.runs import (
+    RunArchive,
+    RunManifest,
+    RunRegistry,
+    append_history,
+    diff_runs,
+    git_sha,
+    metric_history,
+    read_history,
+    save_run,
+)
+from repro.obs.series import (
+    SERIES_SCHEMA_VERSION,
+    LogHistogram,
+    SeriesSet,
+    TimeSeries,
+    snapshot_series,
 )
 from repro.obs.trace import (
     VIRTUAL,
@@ -45,21 +76,46 @@ __all__ = [
     "Counter",
     "CounterSet",
     "Gauge",
+    "HealthEvent",
+    "HealthThresholds",
     "JSONL_SCHEMA_VERSION",
+    "LogHistogram",
+    "RunArchive",
+    "RunManifest",
+    "RunRegistry",
+    "SERIES_SCHEMA_VERSION",
+    "SeriesSet",
     "Span",
     "TRACE_SCHEMA_VERSION",
+    "TimeSeries",
     "Tracer",
     "VIRTUAL",
     "WALL",
+    "append_history",
+    "comm_rollup",
+    "density_drift",
+    "diff_runs",
+    "emit_health",
+    "fleet_health",
     "get_tracer",
+    "git_sha",
     "install_jax_hooks",
     "jax_compile_count",
+    "metric_history",
     "phase_summary",
+    "read_history",
+    "save_run",
     "set_tracer",
     "snapshot_counters",
+    "snapshot_series",
     "span",
+    "spans_from_trace_doc",
+    "staleness_rollup",
+    "store_rollup",
+    "straggler_rollup",
     "to_trace_events",
     "traced",
+    "uplink_rollup",
     "validate_trace",
     "write_trace",
 ]

@@ -147,14 +147,32 @@ def snapshot_counters(prefix: Optional[str] = None) -> dict:
 
 _JAX_SET: Optional[CounterSet] = None   # strong ref: hooks live forever
 
+#: attribute stashed on the ``jax.monitoring`` module itself.  The module
+#: object outlives a reload of *this* module (which resets ``_JAX_SET``),
+#: so the guard cannot be defeated by ``importlib.reload(repro.obs.counters)``
+#: or by two copies of this package installing independently — either of
+#: which would register a second listener and double-count
+#: ``jax/backend_compiles`` (and, through it, ``ScaleEngine.step_compiles``)
+#: whenever train + benchmarks share one process.
+_JAX_HOOK_ATTR = "_repro_obs_compile_counter_set"
+
 
 def install_jax_hooks() -> CounterSet:
     """Idempotently register a ``jax.monitoring`` listener counting backend
-    compiles into the ``jax`` namespace.  Returns the namespace's set."""
+    compiles into the ``jax`` namespace.  Returns the namespace's set.
+
+    Idempotent across repeated calls *and* across reloads of this module:
+    the installed ``CounterSet`` is stashed on ``jax.monitoring`` itself,
+    so at most one listener ever exists per process."""
     global _JAX_SET
     if _JAX_SET is not None:
         return _JAX_SET
     import jax.monitoring
+
+    existing = getattr(jax.monitoring, _JAX_HOOK_ATTR, None)
+    if existing is not None:
+        _JAX_SET = existing
+        return existing
 
     cs = CounterSet("jax")
     compiles = cs.counter("backend_compiles")
@@ -166,6 +184,7 @@ def install_jax_hooks() -> CounterSet:
             compile_s.inc(float(secs))
 
     jax.monitoring.register_event_duration_secs_listener(_on_duration)
+    setattr(jax.monitoring, _JAX_HOOK_ATTR, cs)
     _JAX_SET = cs
     return cs
 

@@ -26,7 +26,7 @@ import os
 from typing import Optional
 
 from repro.obs.counters import snapshot_counters
-from repro.obs.trace import CLOCKS, VIRTUAL, WALL, Tracer, get_tracer
+from repro.obs.trace import CLOCKS, VIRTUAL, WALL, Span, Tracer, get_tracer
 
 #: version of the streaming JSON-lines records (MetricsStream et al.)
 JSONL_SCHEMA_VERSION = 1
@@ -129,6 +129,37 @@ def validate_trace(doc: dict) -> list[str]:
     except TypeError as e:
         problems.append(f"not JSON-serializable: {e}")
     return problems
+
+
+_CLOCK_BY_PID = {pid: clock for clock, pid in CLOCK_PIDS.items()}
+
+
+def spans_from_trace_doc(doc: dict) -> list[Span]:
+    """Inverse of ``to_trace_events``: rebuild ``Span`` objects from an
+    exported trace document so the health rollups (``repro.obs.health``)
+    compute identically from a live tracer and a loaded artifact.
+
+    Track names come from the ``thread_name`` metadata events;
+    timestamps return as seconds (the export's microsecond rounding
+    bounds them to 1e-9 s — byte attrs, which the exact reconciliations
+    sum, round-trip bit-exactly through JSON).
+    """
+    tracks: dict[tuple[int, int], str] = {}
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tracks[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    spans: list[Span] = []
+    for i, ev in enumerate(doc.get("traceEvents", [])):
+        if ev.get("ph") != "X":
+            continue
+        clock = _CLOCK_BY_PID.get(ev.get("pid"), WALL)
+        track = tracks.get((ev.get("pid"), ev.get("tid")),
+                           f"tid/{ev.get('tid')}")
+        t0 = float(ev["ts"]) * 1e-6
+        t1 = t0 + float(ev["dur"]) * 1e-6
+        spans.append(Span(ev["name"], track, t0, t1, clock, i,
+                          dict(ev.get("args", {}))))
+    return spans
 
 
 def phase_summary(spans_or_tracer=None, clock: Optional[str] = None,

@@ -51,7 +51,13 @@ from repro.fl.base import (
 from repro.fl.engine import Callback, RoundCtx, RoundEngine, RoundMetrics, StrategyBase
 from repro.core.accounting import CommReport, FlopsReport
 from repro.models.common import softmax_xent
-from repro.obs import CounterSet, install_jax_hooks, jax_compile_count, span
+from repro.obs import (
+    CounterSet,
+    SeriesSet,
+    install_jax_hooks,
+    jax_compile_count,
+    span,
+)
 from repro.optim import SGDConfig
 from repro.scale.stacked import (
     pack_stacked,
@@ -107,6 +113,10 @@ class ScaleEngine(RoundEngine):
         self.scale_obs = CounterSet("scale.engine")
         self._c_step_calls = self.scale_obs.counter("step_calls")
         self._c_step_compiles = self.scale_obs.counter("step_compiles")
+        # cumulative step/compile series on the wall clock (counter-kind:
+        # the deltas reconcile against the counters above); not
+        # checkpointed — a resumed run restarts its series
+        self.scale_series = SeriesSet("scale.engine")
 
     # ------------------------------------------------------------------
     # construction-time checks
@@ -260,6 +270,11 @@ class ScaleEngine(RoundEngine):
         self._c_step_calls.inc()
         if delta > 0:
             self._c_step_compiles.inc()
+        tw = time.perf_counter() - self._series_epoch
+        self.scale_series.series("step_calls", kind="counter").observe(
+            tw, float(self._c_step_calls.value))
+        self.scale_series.series("step_compiles", kind="counter").observe(
+            tw, float(self._c_step_compiles.value))
 
         comm = self.adapter.round_comm(self.state, ctx)
         flops = self.adapter.round_flops(ctx)

@@ -33,30 +33,33 @@ from typing import Any, Optional, Sequence
 import jax
 import numpy as np
 
-from repro.obs import VIRTUAL, get_tracer, span
+from repro.obs import VIRTUAL, LogHistogram, SeriesSet, get_tracer, span
 from repro.serve.batcher import Batch, MicroBatcher, Request, RequestStream
 from repro.serve.store import ModelStore
 
 PyTree = Any
 
 
-def _percentile(xs: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
-
-
 @dataclasses.dataclass
 class ServeResult:
+    """Latency distributions are DDSketch-style ``LogHistogram`` sketches
+    (``repro.obs.series``): bounded memory regardless of request count,
+    quantiles within 1% relative error, and the three sketches share one
+    bucket grid — so the pointwise ordering latency >= wait survives into
+    the reported quantiles exactly."""
     outputs: dict[int, np.ndarray]       # rid -> model output
-    latencies_ms: list[float]            # per request, batch-launch order
+    latency_ms: LogHistogram             # wait + service, per request
+    wait_ms: LogHistogram                # virtual queue wait component
+    service_ms: LogHistogram             # wall launch-service component
     summary: dict
 
     @property
     def p50_ms(self) -> float:
-        return _percentile(self.latencies_ms, 50)
+        return self.latency_ms.quantile(0.5)
 
     @property
     def p99_ms(self) -> float:
-        return _percentile(self.latencies_ms, 99)
+        return self.latency_ms.quantile(0.99)
 
 
 class ServeEngine:
@@ -88,6 +91,11 @@ class ServeEngine:
         self.interpret = bool(interpret)
         self.metrics = metrics
         self.metrics_every = int(metrics_every)
+        # obs layer 2: engine-lifetime latency sketches + throughput series
+        # (each serve() call merges its own sketches in, so the archived
+        # snapshot covers every call this engine served)
+        self.series = SeriesSet("serve.engine")
+        self._epoch = time.perf_counter()
 
     # ------------------------------------------------------------------
     def _launch(self, reqs: Sequence[Request],
@@ -144,9 +152,11 @@ class ServeEngine:
                                max_wait=self.max_wait,
                                resident=self.store.resident)
         outputs: dict[int, np.ndarray] = {}
-        latencies: list[float] = []
-        waits_ms: list[float] = []
-        services_ms: list[float] = []
+        # per-call sketches (bounded memory however many requests stream
+        # through); merged into the engine-lifetime set after the loop
+        lat_h = LogHistogram()
+        wait_h = LogHistogram()
+        service_h = LogHistogram()
         service_total = 0.0
         n_batches = 0
         n_served = 0
@@ -162,9 +172,9 @@ class ServeEngine:
             for i, (req, wait) in enumerate(
                     zip(batch.requests, batch.queue_waits())):
                 outputs[req.rid] = y[i]
-                latencies.append(wait * 1e3 + service_s * 1e3)
-                waits_ms.append(wait * 1e3)
-                services_ms.append(service_s * 1e3)
+                lat_h.add(wait * 1e3 + service_s * 1e3)
+                wait_h.add(wait * 1e3)
+                service_h.add(service_s * 1e3)
                 if tr.enabled:
                     # batcher-wait on the request's virtual timeline — the
                     # queueing component of its reported latency
@@ -175,8 +185,8 @@ class ServeEngine:
                 self.metrics.emit({
                     "event": "serve", "batches": n_batches,
                     "served": n_served,
-                    "p50_ms": round(_percentile(latencies, 50), 3),
-                    "p99_ms": round(_percentile(latencies, 99), 3),
+                    "p50_ms": round(lat_h.quantile(0.5), 3),
+                    "p99_ms": round(lat_h.quantile(0.99), 3),
                     "cache_hits": self.store.hits,
                     "cache_misses": self.store.misses,
                 })
@@ -189,13 +199,13 @@ class ServeEngine:
             "requests": n_served,
             "batches": n_batches,
             "mean_batch": round(n_served / max(n_batches, 1), 2),
-            "p50_ms": round(_percentile(latencies, 50), 3),
-            "p99_ms": round(_percentile(latencies, 99), 3),
+            "p50_ms": round(lat_h.quantile(0.5), 3),
+            "p99_ms": round(lat_h.quantile(0.99), 3),
             # honest latency components: queue wait vs launch service
-            "p50_wait_ms": round(_percentile(waits_ms, 50), 3),
-            "p99_wait_ms": round(_percentile(waits_ms, 99), 3),
-            "p50_service_ms": round(_percentile(services_ms, 50), 3),
-            "p99_service_ms": round(_percentile(services_ms, 99), 3),
+            "p50_wait_ms": round(wait_h.quantile(0.5), 3),
+            "p99_wait_ms": round(wait_h.quantile(0.99), 3),
+            "p50_service_ms": round(service_h.quantile(0.5), 3),
+            "p99_service_ms": round(service_h.quantile(0.99), 3),
             "requests_per_s": round(n_served / max(service_total, 1e-9), 1),
             "service_s": round(service_total, 4),
             "wall_s": round(wall_s, 4),
@@ -204,7 +214,17 @@ class ServeEngine:
                 st["hits"] / max(st["hits"] + st["misses"], 1), 4),
             **{f"store_{k}": v for k, v in st.items()},
         }
+        # fold this call into the engine-lifetime observability surface
+        self.series.histogram("latency_ms").merge(lat_h)
+        self.series.histogram("wait_ms").merge(wait_h)
+        self.series.histogram("service_ms").merge(service_h)
+        tw = time.perf_counter() - self._epoch
+        self.series.series("requests", kind="counter").observe(
+            tw, self.series.histogram("latency_ms").count)
+        self.series.series("requests_per_s").observe(
+            tw, summary["requests_per_s"])
         if self.metrics:
             self.metrics.emit(summary)
-        return ServeResult(outputs=outputs, latencies_ms=latencies,
+        return ServeResult(outputs=outputs, latency_ms=lat_h,
+                           wait_ms=wait_h, service_ms=service_h,
                            summary=summary)

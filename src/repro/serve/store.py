@@ -44,7 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.obs import CounterSet, get_tracer, span
+import time
+
+from repro.obs import CounterSet, SeriesSet, get_tracer, span
 from repro.sparse import (
     TreeSpec,
     decode_dense,
@@ -102,6 +104,10 @@ class ModelStore:
         self._c_evictions = self.obs.counter("evictions")
         self.obs.gauge("resident", fn=lambda: len(self._slot_of))
         self.obs.gauge("bytes_at_rest", fn=self.total_bytes_at_rest)
+        # miss-path latency sketch: decode+unpack+slot-write seconds, the
+        # cost a cache hit avoids entirely (bounded-memory LogHistogram)
+        self.series = SeriesSet("serve.store")
+        self._h_miss_s = self.series.histogram("miss_decode_s")
         # per-slot residency: an open wall-clock span per occupied slot
         self._slot_handles: dict[int, Any] = {}
 
@@ -145,6 +151,7 @@ class ModelStore:
             self._slot_of.move_to_end(user)
             return slot
         self._c_misses.inc()
+        t0 = time.perf_counter()
         with span("store.miss_decode", track="store", user=user) as sp:
             frame = self._frames.get(user)
             if frame is None:
@@ -164,6 +171,7 @@ class ModelStore:
             self._pool = self._write(self._pool, slot, entry)
             self._slot_of[user] = slot
             self._begin_residency(slot, user)
+        self._h_miss_s.add(time.perf_counter() - t0)
         return slot
 
     def get(self, user: int) -> tuple[PyTree, PyTree]:

@@ -93,7 +93,7 @@ from repro.fl.engine import (
     _pack,
     _unpack,
 )
-from repro.obs import VIRTUAL, get_tracer
+from repro.obs import VIRTUAL, SeriesSet, get_tracer
 from repro.sim.availability import AlwaysUp, Availability
 from repro.sim.events import (
     ARRIVAL,
@@ -207,6 +207,9 @@ class SimEngine(RoundEngine):
         self.clock = VirtualClock()
         self.stats = LinkStats(n)
         self.acc_trace: list[tuple[float, float]] = []   # (virtual s, acc)
+        # obs layer 2: virtual-clock fleet series, sampled once per emitted
+        # round (not checkpointed — LinkStats stays the source of truth)
+        self.sim_series = SeriesSet("sim.engine")
         # async invariant observability (tested in tests/test_sim.py)
         self.observed_spread = 0          # max t_k - min(t) at execution
         self.observed_mix_lag = 0         # max version lag actually mixed
@@ -294,6 +297,21 @@ class SimEngine(RoundEngine):
                 self.stats.record_lost(src, dst)
             out.append((dst, delivered, end))
         return out
+
+    def _sample_sim_series(self) -> None:
+        """One virtual-clock sample of the fleet series.  The cumulative
+        counter-kind byte samples reconcile exactly with the ``sim.links``
+        gauges in ``snapshot_counters()`` (same accumulators)."""
+        t = self.clock.now
+        ss = self.sim_series
+        ss.series("busiest_mb", clock=VIRTUAL).observe(
+            t, float(np.maximum(self.stats.up, self.stats.down).max()) * MB)
+        ss.series("bytes_values", clock=VIRTUAL, kind="counter").observe(
+            t, float(self.stats.up.sum()))
+        ss.series("bytes_wire", clock=VIRTUAL, kind="counter").observe(
+            t, float(self.stats.up_wire.sum()))
+        ss.series("n_retransmits", clock=VIRTUAL, kind="counter").observe(
+            t, float(self.stats.n_retransmits))
 
     def _end_waits(self, ks, t_now: float) -> None:
         """Close ``ssp.wait`` spans for clients unblocked at ``t_now``."""
@@ -511,6 +529,7 @@ class SimEngine(RoundEngine):
         self.clock.advance_to(t0 + dur)
         if metrics.acc_mean is not None:
             self.acc_trace.append((self.clock.now, metrics.acc_mean))
+        self._sample_sim_series()
         up, down = self.stats.up * MB, self.stats.down * MB
         return SimRoundMetrics(
             **dataclasses.asdict(metrics),
@@ -611,7 +630,8 @@ class SimEngine(RoundEngine):
             up, down = self.stats.up * MB, self.stats.down * MB
             st.emitted += 1
             self._next_round = st.emitted
-            yield SimRoundMetrics(
+            self._sample_sim_series()
+            metrics = SimRoundMetrics(
                 round=t, lr=ctx.lr, prune_rate=ctx.prune_rate,
                 comm_busiest_mb=busiest,
                 comm_rows={"busiest_MB": round(busiest, 3)},
@@ -626,6 +646,8 @@ class SimEngine(RoundEngine):
                 max_round=int(st.t_local.max()),
                 retrans_mb=self.stats.retrans_mb,
                 lost_messages=self.stats.n_lost)
+            self._sample_series(metrics)
+            yield metrics
 
     def _async_rounds(self):
         cfg = self.cfg

@@ -34,7 +34,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.accounting import message_bytes
-from repro.obs import CounterSet
+from repro.obs import CounterSet, SeriesSet
 from repro.sparse import PackedSparse, codec
 from repro.utils.tree import tree_nnz, tree_size
 
@@ -329,10 +329,29 @@ class LinkStats:
         self.obs.gauge("n_lost", fn=lambda: self.n_lost)
         self.obs.gauge("bytes_values", fn=lambda: float(self.up.sum()))
         self.obs.gauge("bytes_wire", fn=lambda: float(self.up_wire.sum()))
+        # obs layer 2: bounded-memory sketches of transfer durations/sizes
+        # (error-bounded quantiles without walking the transfers list);
+        # the checkpointed transfers list stays the source of truth and the
+        # sketches are rebuilt from it on load_state
+        self._init_sketches()
+
+    def _init_sketches(self) -> None:
+        self.series = SeriesSet("sim.links")
+        self._h_xfer_s = self.series.histogram("transfer_s")
+        self._h_xfer_bytes = self.series.histogram("transfer_wire_bytes")
+        for tr in self.transfers:
+            self._h_xfer_s.add(max(0.0, tr.t_end - tr.t_start))
+            self._h_xfer_bytes.add(tr.bytes_wire)
+
+    def transfer_time_quantile(self, q: float) -> float:
+        """Error-bounded (alpha=1%) transfer-duration quantile in seconds."""
+        return self._h_xfer_s.quantile(q)
 
     def record(self, src: int, dst: int, bytes_values: float,
                bytes_wire: float, t_start: float, t_end: float,
                attempt: int = 0) -> None:
+        self._h_xfer_s.add(max(0.0, t_end - t_start))
+        self._h_xfer_bytes.add(bytes_wire)
         self.up[src] += bytes_values
         self.down[dst] += bytes_values
         self.up_wire[src] += bytes_wire
@@ -438,3 +457,4 @@ class LinkStats:
             Transfer(float(r[0]), float(r[1]), int(r[2]), int(r[3]),
                      float(r[4]), float(r[5]), int(r[6]))
             for r in np.asarray(d["transfers"], dtype=np.float64)]
+        self._init_sketches()

@@ -1,0 +1,537 @@
+"""obs layer 2: time-series/histogram semantics (merge associativity,
+alpha-bounded quantiles, bounded memory), fleet-health rollups reconciling
+exactly with LinkStats, run manifests/archives/history, cross-run
+regression attribution, the dashboard renderer, and the idempotent jax
+compile-hook bridge."""
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from tests._hypothesis_fallback import given, settings, st
+
+from repro.data import build_federated_image_task
+from repro.fl import FLConfig, make_cnn_task, make_strategy
+from repro.obs import (
+    RunArchive,
+    RunManifest,
+    RunRegistry,
+    LogHistogram,
+    SeriesSet,
+    TimeSeries,
+    Tracer,
+    append_history,
+    comm_rollup,
+    diff_runs,
+    fleet_health,
+    metric_history,
+    read_history,
+    save_run,
+    set_tracer,
+    snapshot_counters,
+    spans_from_trace_doc,
+    staleness_rollup,
+    straggler_rollup,
+    to_trace_events,
+    uplink_rollup,
+)
+from repro.obs.health import HealthThresholds, density_drift, store_rollup
+from repro.obs.series import COUNTER, snapshot_series
+
+pytestmark = pytest.mark.tier1
+
+
+@pytest.fixture()
+def tracer():
+    t = Tracer()
+    old = set_tracer(t)
+    t.enable(mode="full")
+    yield t
+    set_tracer(old)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    clients, _ = build_federated_image_task(
+        0, n_clients=4, partition="pathological", classes_per_client=2,
+        n_train_per_class=24, n_test_per_client=16, hw=8, noise=0.7)
+    task = make_cnn_task("smallcnn", 10, 8, width=4)
+    cfg = FLConfig(n_clients=4, rounds=3, local_epochs=2, batch_size=16,
+                   degree=2, eval_every=1)
+    return task, clients, cfg
+
+
+@pytest.fixture(scope="module")
+def lossy_sim_run(setup):
+    """One lossy fair-uplink sim run under a full-mode tracer: the shared
+    source for every reconciliation test below (spans + engine + final
+    counter snapshot, all from the same process state)."""
+    from repro.sim import LossModel, SimEngine
+
+    task, clients, cfg = setup
+    t = Tracer()
+    old = set_tracer(t)
+    t.enable(mode="full")
+    try:
+        sim = SimEngine(make_strategy("dispfl"), task, clients, cfg,
+                        local_exec="loop", mode="async", staleness=1,
+                        uplink="fair",
+                        loss=LossModel(0.3, timeout_s=0.05, seed=0))
+        for _ in sim.rounds():
+            pass
+        # per-instance snapshots: the process-wide snapshot_counters() sums
+        # same-key metrics across every live engine in this test session,
+        # which would break the exactness assertions below
+        counters = {f"sim.links/{k}": v
+                    for k, v in sim.stats.obs.snapshot().items()}
+        series = {"series": {f"sim.engine/{n}": d for n, d in
+                             sim.sim_series.snapshot()["series"].items()}}
+        yield t, sim, counters, series
+    finally:
+        set_tracer(old)
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram: quantile error bound, merge algebra, bounded memory
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       scale=st.floats(min_value=0.1, max_value=100.0))
+def test_histogram_quantile_within_alpha_of_exact(seed, scale):
+    rng = np.random.default_rng(seed)
+    xs = rng.lognormal(mean=math.log(scale), sigma=1.0, size=2000)
+    h = LogHistogram(alpha=0.01)
+    for x in xs:
+        h.add(float(x))
+    xs_sorted = np.sort(xs)
+    for q in (0.01, 0.25, 0.5, 0.9, 0.99):
+        exact = float(xs_sorted[int(q * (len(xs) - 1))])
+        got = h.quantile(q)
+        assert abs(got - exact) <= 0.0101 * exact, (q, got, exact)
+
+
+def test_histogram_merge_is_associative_and_matches_bulk_add():
+    rng = np.random.default_rng(7)
+    parts = [rng.exponential(10 ** i, size=500) for i in range(3)]
+    sketches = []
+    for xs in parts:
+        h = LogHistogram()
+        for x in xs:
+            h.add(float(x))
+        sketches.append(h)
+    a, b, c = sketches
+
+    def buckets(h):
+        """Everything order-independent: the float ``sum`` accumulator
+        alone varies by rounding with addition order."""
+        return {k: v for k, v in h.to_dict().items() if k != "sum"}
+
+    left = LogHistogram().merge(a).merge(b).merge(c)
+    bc = LogHistogram().merge(b).merge(c)
+    right = LogHistogram().merge(a).merge(bc)
+    assert buckets(left) == buckets(right)
+    assert left.sum == pytest.approx(right.sum, rel=1e-12)
+
+    bulk = LogHistogram()
+    for xs in parts:
+        for x in xs:
+            bulk.add(float(x))
+    # merge at the same alpha is exact: identical buckets, not just close
+    assert buckets(left) == buckets(bulk)
+    assert left.count == 1500 and left.sum == pytest.approx(bulk.sum)
+    for q in (0.1, 0.5, 0.9, 0.99):
+        assert left.quantile(q) == bulk.quantile(q) == right.quantile(q)
+
+
+def test_histogram_memory_bounded_under_1e5_samples():
+    rng = np.random.default_rng(0)
+    h = LogHistogram(alpha=0.01, max_buckets=256)
+    xs = rng.lognormal(mean=0.0, sigma=2.0, size=100_000)
+    for x in xs:
+        h.add(float(x))
+    assert h.n_buckets <= 256
+    assert h.count == 100_000
+    # collapsing only the lowest buckets keeps tail quantiles honest
+    exact_p99 = float(np.sort(xs)[int(0.99 * (len(xs) - 1))])
+    assert abs(h.quantile(0.99) - exact_p99) <= 0.0101 * exact_p99
+
+
+def test_histogram_zero_bucket_and_negative_rejection():
+    h = LogHistogram()
+    h.add(0.0, n=3)
+    h.add(1.0)
+    assert h.count == 4 and h.quantile(0.0) == 0.0
+    with pytest.raises(ValueError):
+        h.add(-1.0)
+
+
+def test_histogram_merge_rejects_mismatched_alpha():
+    with pytest.raises(ValueError):
+        LogHistogram(alpha=0.01).merge(LogHistogram(alpha=0.02))
+
+
+def test_histogram_roundtrip_via_dict():
+    h = LogHistogram()
+    for x in (0.0, 0.5, 2.0, 1e6):
+        h.add(x)
+    back = LogHistogram.from_dict(json.loads(json.dumps(h.to_dict())))
+    assert back.to_dict() == h.to_dict()
+    assert back.quantile(0.5) == h.quantile(0.5)
+
+
+def test_same_grid_sketches_preserve_quantile_dominance():
+    """latency = wait + service dominates wait pointwise; with one shared
+    bucket grid that ordering survives into every quantile (what keeps
+    the serve summary's p50_ms >= p50_wait_ms honest)."""
+    rng = np.random.default_rng(3)
+    waits = rng.exponential(2.0, size=800)
+    services = rng.exponential(5.0, size=800)
+    hw, hl = LogHistogram(), LogHistogram()
+    for w, s in zip(waits, services):
+        hw.add(float(w))
+        hl.add(float(w + s))
+    for q in np.linspace(0, 1, 21):
+        assert hl.quantile(float(q)) >= hw.quantile(float(q))
+
+
+# ---------------------------------------------------------------------------
+# TimeSeries: counter deltas under decimation
+# ---------------------------------------------------------------------------
+
+
+def test_series_counter_delta_sum_survives_decimation():
+    ts = TimeSeries("c", kind=COUNTER, max_points=16, initial=0.0)
+    total = 0.0
+    for i in range(1, 301):
+        total += i
+        ts.observe(float(i), total)
+    assert len(ts.points()) <= 16
+    assert ts.delta_sum() == pytest.approx(total)
+    assert ts.last[1] == pytest.approx(total)
+    # telescoping: deltas re-sum to last - initial even after decimation
+    assert sum(d for _, d in ts.deltas()) == pytest.approx(total)
+
+
+def test_gauge_series_rejects_deltas_and_keeps_newest():
+    ts = TimeSeries("g", max_points=8)
+    for i in range(100):
+        ts.observe(float(i), float(i * 2))
+    assert ts.last == (99.0, 198.0)
+    with pytest.raises(TypeError):
+        ts.deltas()
+
+
+def test_series_set_snapshot_roundtrip():
+    ss = SeriesSet("t.ns")
+    ss.series("a", kind=COUNTER).observe(1.0, 5.0)
+    ss.histogram("h").add(2.0)
+    doc = snapshot_series(prefix="t.ns")
+    assert "t.ns/a" in doc["series"] and "t.ns/h" in doc["histograms"]
+    back = TimeSeries.from_dict(doc["series"]["t.ns/a"])
+    assert back.points() == [(1.0, 5.0)] and back.kind == COUNTER
+
+
+# ---------------------------------------------------------------------------
+# fleet rollups reconcile exactly with LinkStats / engine accumulators
+# ---------------------------------------------------------------------------
+
+
+def test_comm_rollup_reconciles_bitexact_with_linkstats(lossy_sim_run):
+    t, sim, counters, _ = lossy_sim_run
+    comm = comm_rollup(t)
+    stats = sim.stats
+    n = sim.cfg.n_clients
+    for k in range(n):
+        assert comm["up_bytes"].get(k, 0.0) == stats.up[k]       # bit-exact
+        assert comm["down_bytes"].get(k, 0.0) == stats.down[k]
+        assert comm["up_wire_bytes"].get(k, 0.0) == stats.up_wire[k]
+    assert comm["n_retransmits"] == stats.n_retransmits
+    busiest = int(np.argmax(np.maximum(stats.up, stats.down)))
+    assert comm["busiest_node"] == busiest
+    assert comm["busiest_node_mb"] == pytest.approx(
+        float(np.maximum(stats.up, stats.down).max()) * 1e-6)
+    # and against the process-wide counter snapshot taken at run end
+    assert sum(comm["up_bytes"].values()) == counters["sim.links/bytes_values"]
+    assert comm["n_retransmits"] == counters["sim.links/n_retransmits"]
+
+
+def test_comm_rollup_identical_from_exported_trace_doc(lossy_sim_run):
+    t, _, _, _ = lossy_sim_run
+    doc = json.loads(json.dumps(to_trace_events(t)))
+    live, revived = comm_rollup(t), comm_rollup(doc)
+    assert revived["up_bytes"] == live["up_bytes"]
+    assert revived["n_retransmits"] == live["n_retransmits"]
+    assert revived["link_retransmit_rate"] == live["link_retransmit_rate"]
+
+
+def test_sim_series_counter_deltas_match_final_counters(lossy_sim_run):
+    _, sim, counters, series = lossy_sim_run
+    bv = TimeSeries.from_dict(series["series"]["sim.engine/bytes_values"])
+    assert bv.delta_sum() == counters["sim.links/bytes_values"]
+    assert bv.last[1] == float(sim.stats.up.sum())
+    nr = TimeSeries.from_dict(series["series"]["sim.engine/n_retransmits"])
+    assert nr.delta_sum() == counters["sim.links/n_retransmits"]
+
+
+def test_linkstats_sketch_tracks_transfers_and_survives_restore(
+        lossy_sim_run):
+    _, sim, _, _ = lossy_sim_run
+    stats = sim.stats
+    assert stats._h_xfer_s.count == len(stats.transfers)
+    # rebuilding from the restored transfer list reproduces the sketch
+    from repro.sim.links import LinkStats
+
+    clone = LinkStats(sim.cfg.n_clients)
+    clone.load_state(stats.state_dict())
+    assert clone._h_xfer_s.to_dict() == stats._h_xfer_s.to_dict()
+    assert clone.transfer_time_quantile(0.5) == \
+        stats.transfer_time_quantile(0.5)
+
+
+def test_straggler_staleness_uplink_rollups(lossy_sim_run):
+    t, sim, _, _ = lossy_sim_run
+    strag = straggler_rollup(t)
+    assert strag["n_clients"] == sim.cfg.n_clients
+    assert strag["top_stragglers"][0][1] == max(strag["compute_s"].values())
+    stale = staleness_rollup(t)
+    assert stale["n_waits"] == stale["wait_s"].count
+    up = uplink_rollup(t)
+    assert up["busy_s"], "fair uplink run must record uplink.busy spans"
+    for k, busy in up["busy_s"].items():
+        assert 0.0 <= up["utilization"][k] <= 1.0 + 1e-9
+        assert busy >= 0.0
+
+
+def test_fleet_health_flags_lossy_run_and_dropped_spans(lossy_sim_run):
+    t, _, counters, _ = lossy_sim_run
+    roll, events = fleet_health(t, counters=counters)
+    kinds = {e.kind for e in events}
+    assert "link.retransmit_rate" in kinds     # 30% loss trips the 5% rule
+    ev = next(e for e in events if e.kind == "link.retransmit_rate")
+    assert ev.severity == "critical"           # > 2x threshold
+    assert roll["comm"]["retransmit_rate"] > 0.05
+    # a ring buffer that dropped spans must be surfaced, not reconciled
+    _, events2 = fleet_health(t, dropped_spans=5)
+    assert any(e.kind == "trace.dropped" for e in events2)
+
+
+def test_fleet_health_thresholds_disable_and_store_rule():
+    spans = []
+    counters = {"serve.store/hits": 1, "serve.store/misses": 9}
+    assert store_rollup(counters)["hit_ratio"] == pytest.approx(0.1)
+    _, events = fleet_health(spans, counters=counters)
+    assert any(e.kind == "store.hit_ratio" for e in events)
+    _, none = fleet_health(
+        spans, counters=counters,
+        thresholds=HealthThresholds(min_store_hit_ratio=None))
+    assert not any(e.kind == "store.hit_ratio" for e in none)
+
+
+def test_density_drift_pairs_series_positionally():
+    m = TimeSeries("m")
+    t = TimeSeries("t")
+    for i, (mv, tv) in enumerate([(0.5, 0.5), (0.45, 0.48), (0.40, 0.47)]):
+        m.observe(float(i), mv)
+        t.observe(float(i), tv)
+    d = density_drift(m, t)
+    assert d["n"] == 3
+    assert d["max_drift"] == pytest.approx(0.07)
+    assert d["final_drift"] == pytest.approx(0.07)
+    _, events = fleet_health([], density=(m, t))
+    assert any(e.kind == "density.drift" for e in events)
+
+
+# ---------------------------------------------------------------------------
+# run manifests, archives, history, attribution
+# ---------------------------------------------------------------------------
+
+
+def test_run_archive_roundtrip(tmp_path, tracer):
+    from repro.obs import span
+    with span("phase.a", track="x"):
+        pass
+    manifest = RunManifest.build("test", seed=7, config={"k": 1})
+    ar = save_run(str(tmp_path / "r1"), manifest, tracer=tracer,
+                  report={"ok": True})
+    assert ar.exists
+    m2 = ar.manifest()
+    assert m2.run_id == manifest.run_id and m2.seed == 7
+    assert m2.config == {"k": 1}
+    assert ar.report() == {"ok": True}
+    assert "phase.a" in ar.phase_summary()
+    assert isinstance(ar.counters(), dict)
+    reg = RunRegistry(str(tmp_path))
+    assert reg.run_ids() == ["r1"]
+    assert reg.latest()[0].run_dir == ar.run_dir
+
+
+def test_append_and_read_history(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    rows = [{"name": "codec", "us_per_call": 10.0}]
+    n = append_history(path, {"m1": rows}, sha="abc", ts=100.0)
+    assert n == 2
+    append_history(path, {"m1": [{"name": "codec", "us_per_call": 12.0}]},
+                   sha="def", ts=200.0,
+                   phase_summary_doc={"p": {"count": 1, "total_s": 2.0,
+                                            "mean_s": 2.0, "max_s": 2.0}},
+                   counters={"jax/backend_compiles": 3})
+    mods = read_history(path, event="module")
+    assert [r["git_sha"] for r in mods] == ["abc", "def"]
+    runs = read_history(path, event="run")
+    assert len(runs) == 2 and runs[1]["counters"] == \
+        {"jax/backend_compiles": 3}
+    assert metric_history(path, "m1", "codec", "us_per_call") == \
+        [(100.0, 10.0), (200.0, 12.0)]
+    # malformed lines are skipped, not fatal
+    with open(path, "a") as f:
+        f.write("not json\n")
+    assert len(read_history(path)) == 4
+
+
+def test_attribute_names_dominant_phase_on_injected_regression():
+    old = {"phase_summary": {
+        "round.local": {"count": 3, "total_s": 3.0, "mean_s": 1, "max_s": 1},
+        "round.mix": {"count": 3, "total_s": 0.3, "mean_s": .1, "max_s": .1}},
+        "counters": {"jax/backend_compiles": 1, "sim.links/transfers": 24}}
+    new = {"phase_summary": {
+        "round.local": {"count": 3, "total_s": 9.0, "mean_s": 3, "max_s": 3},
+        "round.mix": {"count": 3, "total_s": 0.4, "mean_s": .1, "max_s": .2}},
+        "counters": {"jax/backend_compiles": 14, "sim.links/transfers": 24}}
+    d = diff_runs(old, new)
+    assert d["phases"][0]["phase"] == "round.local"     # dominant |delta|
+    assert d["phases"][0]["delta_s"] == pytest.approx(6.0)
+    assert d["counters"][0]["counter"] == "jax/backend_compiles"
+    assert all(c["counter"] != "sim.links/transfers"
+               for c in d["counters"])                  # unchanged: dropped
+
+
+# ---------------------------------------------------------------------------
+# dashboard renderer
+# ---------------------------------------------------------------------------
+
+
+def test_dashboard_renders_and_checks_from_archive(tmp_path, lossy_sim_run):
+    from repro.launch.dash import check_dashboard, render_dashboard
+
+    t, _, counters, _ = lossy_sim_run
+    manifest = RunManifest.build("sim", seed=0)
+    # per-instance counters: other live LinkStats in a shared pytest
+    # process would pollute the process-wide snapshot's sim.links/* keys
+    ar = save_run(str(tmp_path / "run"), manifest, tracer=t,
+                  counters=counters)
+    page = render_dashboard(archive=ar)
+    assert page.startswith("<!doctype html>")
+    assert "<script" not in page.lower()
+    assert manifest.run_id in page
+    for sec in ("fleet health", "communication", "phases", "counters"):
+        assert f"<h2>{sec}</h2>" in page
+    # icon + label, never color alone, for tripped health rules
+    assert "◆ serious" in page or "✖ critical" in page
+    problems = check_dashboard(page, ar.trace(), ar.counters())
+    assert problems == []
+
+
+def test_dashboard_check_catches_broken_reconciliation(tmp_path,
+                                                       lossy_sim_run):
+    from repro.launch.dash import check_dashboard, render_dashboard
+
+    t, _, counters, _ = lossy_sim_run
+    doc = to_trace_events(t)
+    # swap in the fixture's per-instance counters: the exported snapshot
+    # aggregates every live LinkStats in a shared pytest process
+    doc["otherData"]["counters"] = dict(counters)
+    page = render_dashboard(trace_doc=doc)
+    counters = dict(doc["otherData"]["counters"])
+    assert check_dashboard(page, doc, counters) == []
+    counters["sim.links/bytes_values"] += 1.0            # inject corruption
+    assert any("reconcile" in p
+               for p in check_dashboard(page, doc, counters))
+    assert any("missing section" in p
+               for p in check_dashboard("<!doctype html><html></html>",
+                                        None, {}))
+
+
+def test_diff_dashboard_renders_regression(tmp_path):
+    from repro.launch.dash import render_diff
+
+    old = {"phase_summary": {"round.local": {
+        "count": 3, "total_s": 3.0, "mean_s": 1.0, "max_s": 1.0}},
+        "counters": {"jax/backend_compiles": 1}}
+    new = {"phase_summary": {"round.local": {
+        "count": 3, "total_s": 9.0, "mean_s": 3.0, "max_s": 3.0}},
+        "counters": {"jax/backend_compiles": 14}}
+    page = render_diff(old, new, "old-sha", "new-sha")
+    assert "round.local" in page and "▲" in page
+    assert "jax/backend_compiles" in page
+
+
+def test_dashboard_sparkline_svg_shape():
+    from repro.launch.dash import _sparkline
+
+    svg = _sparkline([(0.0, 1.0), (1.0, 3.0), (2.0, 2.0)])
+    assert svg.startswith('<svg class="spark"')
+    assert "<polyline" in svg and "<circle" in svg and "<title>" in svg
+    assert _sparkline([(0.0, 1.0)]).startswith("<div")   # too few points
+
+
+# ---------------------------------------------------------------------------
+# idempotent jax compile hooks
+# ---------------------------------------------------------------------------
+
+
+def test_install_jax_hooks_idempotent():
+    import jax.monitoring
+
+    from repro.obs import counters as counters_mod
+
+    cs1 = counters_mod.install_jax_hooks()
+    cs2 = counters_mod.install_jax_hooks()
+    assert cs1 is cs2
+    marker = getattr(jax.monitoring, counters_mod._JAX_HOOK_ATTR)
+    assert marker is cs1
+
+
+def test_install_jax_hooks_survives_module_reload():
+    # a module reload must rediscover the existing listener, not stack a
+    # second one (double-counting every compile).  Reloading counters.py
+    # re-executes it in the shared module dict, replacing the metric
+    # classes process-wide — so run the reload in a subprocess rather
+    # than poisoning every later test in this one.
+    code = textwrap.dedent("""
+        import importlib
+        import jax.monitoring
+        from repro.obs import counters as counters_mod
+
+        cs1 = counters_mod.install_jax_hooks()
+        n_before = len(
+            jax.monitoring.get_event_duration_listeners()
+            if hasattr(jax.monitoring, "get_event_duration_listeners")
+            else [])
+        reloaded = importlib.reload(counters_mod)
+        cs3 = reloaded.install_jax_hooks()
+        assert cs3 is cs1, "reload stacked a second listener set"
+        assert getattr(jax.monitoring, reloaded._JAX_HOOK_ATTR) is cs1
+        if hasattr(jax.monitoring, "get_event_duration_listeners"):
+            n_after = len(jax.monitoring.get_event_duration_listeners())
+            assert n_after == n_before, (n_before, n_after)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), os.pardir, "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
